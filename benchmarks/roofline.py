@@ -1,0 +1,125 @@
+"""§Roofline analysis: three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts in results/dryrun/.
+
+Terms (TPU v5e):
+  compute    = FLOPs_per_device / 197e12            [s]
+  memory     = bytes_per_device / 819e9             [s]
+  collective = collective_bytes_per_device / 50e9   [s]
+
+All numerators are trip-count-corrected per-device values from the optimized
+HLO (see utils/hlo_cost.py).  MODEL_FLOPS (useful work) per device:
+  train:   6 · N_active · tokens_per_round / n_devices
+  prefill: 2 · N_active · tokens / n_devices
+  decode:  2 · N_active · batch  / n_devices   (1 new token per sequence)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s/link
+
+HBM_PER_CHIP = 16e9      # v5e
+
+
+def model_flops_per_device(rec):
+    n_act = rec["active_params"]
+    n_dev = rec["n_devices"]
+    kind = rec["kind"]
+    shape = rec["shape"]
+    from repro.configs import get_shape
+    s = get_shape(shape)
+    if kind == "train":
+        tokens = s.global_batch * s.seq_len * rec.get("h_local", 8)
+        return 6.0 * n_act * tokens / n_dev
+    if kind == "prefill":
+        return 2.0 * n_act * s.global_batch * s.seq_len / n_dev
+    return 2.0 * n_act * s.global_batch / n_dev
+
+
+def terms(rec):
+    comp = rec["flops"] / PEAK_FLOPS
+    memt = rec["bytes_accessed"] / HBM_BW
+    coll = rec["collective_bytes"] / ICI_BW
+    dom = max(("compute", comp), ("memory", memt), ("collective", coll),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec)
+    return {
+        "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / rec["flops"] if rec["flops"] else 0.0,
+        # fraction of roofline: useful work time over the actual bound
+        "roofline_frac": (mf / PEAK_FLOPS) / max(comp, memt, coll)
+        if max(comp, memt, coll) else 0.0,
+    }
+
+
+def load(dirname="results/dryrun", mesh=None, tag=""):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        r = json.load(open(f))
+        if "mesh" not in r:
+            continue   # auxiliary perf-log records
+        if mesh and r["mesh"] != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(recs, fmt="md"):
+    rows = []
+    for r in recs:
+        t = terms(r)
+        mem = r.get("memory", {})
+        arg_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+        tmp_gb = mem.get("temp_size_in_bytes", 0) / 1e9
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "mode": r["mode"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "useful_ratio": t["useful_ratio"],
+            "roofline_frac": t["roofline_frac"],
+            "arg_GB": arg_gb, "temp_GB": tmp_gb,
+            "fits": (arg_gb + tmp_gb) / (r["n_devices"] / (256 if "x16x" not in
+                     r["mesh"] else 512)) <= HBM_PER_CHIP / 1e9,
+            "compile_s": r["compile_s"],
+        })
+    if fmt == "md":
+        hdr = ("| arch | shape | mode | compute s | memory s | coll s | "
+               "dominant | useful | roofl.frac | arg+temp GB/dev |")
+        sep = "|" + "---|" * 11
+        lines = [hdr, sep]
+        for w in rows:
+            lines.append(
+                f"| {w['arch']} | {w['shape']} | {w['mode']} "
+                f"| {w['compute_s']:.3e} | {w['memory_s']:.3e} "
+                f"| {w['collective_s']:.3e} | **{w['dominant']}** "
+                f"| {w['useful_ratio']:.2f} | {w['roofline_frac']:.2f} "
+                f"| {w['arg_GB'] + w['temp_GB']:.1f} |")
+        return "\n".join(lines)
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load(args.dir, mesh=args.mesh, tag=args.tag)
+    print(table(recs))
+    print(f"\n{len(recs)} records; dominant terms:",
+          {d: sum(1 for r in recs if terms(r)["dominant"] == d)
+           for d in ("compute", "memory", "collective")})
+
+
+if __name__ == "__main__":
+    main()

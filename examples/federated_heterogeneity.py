@@ -1,0 +1,88 @@
+"""The paper's experiment (Figure 1), miniaturized for CPU: compare
+{Local SGD, Adam global/local, OASIS global/local} on heterogeneous federated
+classification with the main-class partitioning protocol (30/50/70%).
+
+  PYTHONPATH=src python examples/federated_heterogeneity.py [--frac 0.5]
+
+CIFAR-10/ResNet18 of the paper is replaced by a synthetic same-shape image
+dataset + MLP (no downloads in this container); the partitioning protocol,
+client count (10), momentum (0.9), scaling momentum (0.999) follow the paper.
+Writes results/fig1_example.csv with loss/accuracy per communication round.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PrecondConfig, SavicConfig, savic
+from repro.data import (ClassificationData, FederatedLoader,
+                        heterogeneity_score, main_class_partition)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--frac", type=float, default=0.5)
+ap.add_argument("--rounds", type=int, default=20)
+ap.add_argument("--h-local", type=int, default=6)
+args = ap.parse_args()
+
+data = ClassificationData.make(n=8000, n_classes=10, seed=0)
+xte, yte = jnp.asarray(data.x[-1000:]), jnp.asarray(data.y[-1000:])
+parts = main_class_partition(data.y[:-1000], 10, args.frac, seed=0)
+print(f"main-class fraction {args.frac}: heterogeneity score "
+      f"{heterogeneity_score(data.y[:-1000], parts):.3f}")
+
+D = data.x.shape[1]
+
+
+def init(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (D, 128)) * D ** -0.5,
+            "b1": jnp.zeros((128,)),
+            "w2": jax.random.normal(k2, (128, 10)) * 128 ** -0.5,
+            "b2": jnp.zeros((10,))}
+
+
+def loss(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], 1)[:, 0]
+    return (logz - gold).mean()
+
+
+def accuracy(params):
+    h = jax.nn.relu(xte @ params["w1"] + params["b1"])
+    return float((jnp.argmax(h @ params["w2"] + params["b2"], -1)
+                  == yte).mean())
+
+
+METHODS = {"SGD": ("identity", "global"),
+           "Adam global": ("adam", "global"),
+           "Adam local": ("adam", "local"),
+           "OASIS global": ("oasis", "global"),
+           "OASIS local": ("oasis", "local")}
+
+rows = []
+for name, (kind, scaling) in METHODS.items():
+    pc = PrecondConfig(kind=kind, alpha=1e-8, beta2=0.999)
+    sv = SavicConfig(gamma=0.02, beta1=0.9, scaling=scaling)
+    step = jax.jit(savic.build_round_step(loss, pc, sv))
+    state = savic.init_state(jax.random.PRNGKey(0), init, pc, sv, 10)
+    loader = FederatedLoader(data.x[:-1000], data.y[:-1000].astype(np.int32),
+                             parts, batch_size=64, seed=0)
+    key = jax.random.PRNGKey(1)
+    for r in range(args.rounds):
+        key, k = jax.random.split(key)
+        state, met = step(state, jax.tree.map(jnp.asarray,
+                                              loader.round_batch(args.h_local)), k)
+        rows.append((name, r, float(met["loss"]),
+                     accuracy(savic.average_params(state))))
+    print(f"{name:14s} final loss {rows[-1][2]:.4f} acc {rows[-1][3]:.3f}")
+
+import os
+os.makedirs("results", exist_ok=True)
+with open("results/fig1_example.csv", "w") as f:
+    f.write("method,round,loss,test_acc\n")
+    for r in rows:
+        f.write(",".join(map(str, r)) + "\n")
+print("wrote results/fig1_example.csv")

@@ -1,0 +1,55 @@
+"""Quickstart: SAVIC (Local SGD + Adam scaling) on a strongly-convex problem.
+
+Runs in ~20s on CPU. Shows the public API end to end: preconditioner config,
+round-step builder, state init, the training loop, and the theory predictors.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PrecondConfig, SavicConfig, savic, theory
+from repro.data import QuadraticLoader, QuadraticProblem
+
+# 1. a distributed problem: M=8 clients, heterogeneous quadratics
+problem = QuadraticProblem.make(d=32, M=8, mu=0.5, L=8.0, sigma=0.5,
+                                heterogeneity=2.0, seed=0)
+Q = jnp.asarray(problem.Q, jnp.float32)
+b = jnp.asarray(problem.b, jnp.float32)
+
+
+def loss_fn(params, micro):
+    x = params["x"]
+    Qm, bm = Q[micro["cid"]], b[micro["cid"]]
+    return 0.5 * (x - bm) @ Qm @ (x - bm) + micro["z"] @ x
+
+
+# 2. SAVIC: Adam-style preconditioner, global scaling (Algorithm 1)
+pc = PrecondConfig(kind="adam", alpha=1e-6)
+sv = SavicConfig(gamma=0.05, beta1=0.9, scaling="global")
+round_step = jax.jit(savic.build_round_step(loss_fn, pc, sv))
+state = savic.init_state(jax.random.PRNGKey(0),
+                         lambda k: {"x": jnp.zeros(32)}, pc, sv, n_clients=8)
+
+# 3. train: H=8 local steps per communication round
+loader = QuadraticLoader(problem, seed=1)
+key = jax.random.PRNGKey(2)
+xstar = jnp.asarray(problem.x_star(), jnp.float32)
+for r in range(40):
+    key, k = jax.random.split(key)
+    batch = jax.tree.map(jnp.asarray, loader.round_batch(H=8))
+    state, met = round_step(state, batch, k)
+    if r % 10 == 0 or r == 39:
+        x = savic.average_params(state)["x"]
+        print(f"round {r:3d}  loss {float(met['loss']):8.4f}  "
+              f"|x-x*|^2 {float(jnp.sum((x - xstar) ** 2)):.4f}  "
+              f"client-drift {float(met['client_drift']):.2e}")
+
+# 4. what the theory says
+spec = theory.ProblemSpec(mu=0.5, L=8.0, sigma2=0.25, alpha=1e-6, Gamma=1.0,
+                          M=8, H=8)
+print(f"\nTheorem-1 contraction/step (Γ=1 scale): "
+      f"{theory.thm1_rate(spec, 0.05):.5f}")
+print("Done — see examples/federated_heterogeneity.py for the paper's Fig.1 "
+      "experiment and examples/train_lm.py for a ~100M-param LM run.")

@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + greedy decode on any assigned arch.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch zamba2-2.7b
+  PYTHONPATH=src python examples/serve_batched.py --arch qwen3-4b \
+      --decode-window 16     # sliding-window decode (long_500k-style cache)
+
+Runs the REDUCED config on CPU; on TPU the same serve path lowers the full
+configs across the production mesh (launch/steps.build_serve_step).
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="mamba2-1.3b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--gen-len", type=int, default=32)
+ap.add_argument("--decode-window", type=int, default=0)
+args = ap.parse_args()
+
+tokens = serve(args.arch, reduced=True, batch=args.batch,
+               prompt_len=args.prompt_len, gen_len=args.gen_len,
+               decode_window=args.decode_window)
+print("generated token ids (first sequence):", tokens[0].tolist())

@@ -1,0 +1,84 @@
+"""Dependency-free pytree checkpointing (msgpack + raw numpy buffers).
+
+Layout: ``<dir>/step_<n>/state.msgpack`` holding a manifest (paths, shapes,
+dtypes, scalars) and a single concatenated buffer file. Restores into the
+exact pytree structure given a template (or returns raw dict-of-arrays).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.utils.tree import tree_from_paths, tree_paths
+
+_MAGIC = "repro-ckpt-v1"
+
+
+def save(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"magic": _MAGIC, "step": step, "leaves": []}
+    with open(os.path.join(tmp, "data.bin"), "wb") as fb:
+        off = 0
+        for p, leaf in tree_paths(state):
+            arr = np.asarray(jax.device_get(leaf))
+            buf = np.ascontiguousarray(arr).tobytes()
+            manifest["leaves"].append({
+                "path": p, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "offset": off, "nbytes": len(buf),
+            })
+            fb.write(buf)
+            off += len(buf)
+    with open(os.path.join(tmp, "state.msgpack"), "wb") as fm:
+        fm.write(msgpack.packb(manifest))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template, step: int = None):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "state.msgpack"), "rb") as fm:
+        manifest = msgpack.unpackb(fm.read())
+    assert manifest["magic"] == _MAGIC
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    data = open(os.path.join(path, "data.bin"), "rb").read()
+
+    def one(p, leaf):
+        meta = by_path[p]
+        arr = np.frombuffer(data, dtype=np.dtype(meta["dtype"]),
+                            count=int(np.prod(meta["shape"]) or 1),
+                            offset=meta["offset"]).reshape(meta["shape"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{p}: ckpt {arr.shape} != template {leaf.shape}")
+        return jnp.asarray(arr)
+
+    return tree_from_paths(template, one), step
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

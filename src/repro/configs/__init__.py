@@ -1,0 +1,237 @@
+"""Config system: architecture configs, input shapes, and the registry.
+
+Every assigned architecture has a module ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (exact assigned dims) and ``REDUCED`` (a tiny same-family variant for CPU
+smoke tests: <=2 layers, d_model<=512, <=4 experts).
+
+Select with ``--arch <id>`` (dashed ids, e.g. ``zamba2-2.7b``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# --------------------------------------------------------------------------- #
+# Model configuration
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0              # routed experts
+    n_shared: int = 0               # always-on shared experts
+    top_k: int = 1
+    d_ff_expert: int = 0            # per-expert FFN hidden dim
+    d_ff_shared: int = 0            # total shared-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_layer_start: int = 0        # first layer index that is MoE (earlier = dense)
+    d_ff_dense: int = 0             # FFN dim for the dense (non-MoE) layers
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256                # SSD chunk length
+    ngroups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                 # 0 -> d_model // n_heads
+    # attention features
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0         # 0 = full attention
+    local_global_ratio: int = 0     # gemma3: N local layers per 1 global (0 = all global)
+    logit_softcap: float = 0.0
+    # norm / activation
+    norm_eps: float = 1e-6
+    act: str = "silu"               # silu (SwiGLU) | gelu (GeGLU)
+    tie_embeddings: bool = False
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): run a shared (weight-tied) attention block every k ssm layers
+    hybrid_attn_every: int = 0
+    # modality frontend stub: extra embedding inputs of shape (B, n_frontend, d_model)
+    frontend_tokens: int = 0        # vlm: #patch embeddings; audio: embeddings per frame
+    frontend_kind: str = ""         # "" | "vision" | "audio"
+    # source citation
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab_size
+        n = V * d  # embeddings
+        if not self.tie_embeddings:
+            n += V * d  # lm head
+        per_layer = 0
+        hd = self.head_dim
+        if self.family == "ssm" or (self.family == "hybrid" and self.ssm):
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            # in_proj(z,x,B,C,dt) + conv + out_proj + A,D,dt_bias + norm
+            conv_dim = d_in + 2 * s.ngroups * s.d_state
+            per_layer += d * (2 * d_in + 2 * s.ngroups * s.d_state + nheads)
+            per_layer += conv_dim * s.d_conv + d_in * d + 3 * nheads + 2 * d
+        if self.family in ("dense", "moe", "audio", "vlm") or self.hybrid_attn_every:
+            attn = d * self.n_heads * hd  # q
+            if self.mla:
+                m = self.mla
+                attn = (d * m.q_lora_rank
+                        + m.q_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                        + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                        + m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                        + self.n_heads * m.v_head_dim * d)
+            else:
+                attn += 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            n_attn_layers = (L if not self.hybrid_attn_every
+                             else L // self.hybrid_attn_every)
+            if self.hybrid_attn_every:  # weight-tied shared block counted once
+                n += attn + 3 * d * d  # incl. shared MLP-ish projections
+                n_attn_layers = 0
+            per_layer += attn if not self.hybrid_attn_every else 0
+        if self.family in ("dense", "audio", "vlm"):
+            per_layer += 3 * d * self.d_ff + 2 * d
+        elif self.family == "moe":
+            m = self.moe
+            moe_layers = L - m.moe_layer_start
+            dense_layers = m.moe_layer_start
+            n += moe_layers * (m.n_experts * 3 * d * m.d_ff_expert
+                               + m.n_shared * 3 * d * (m.d_ff_shared // max(m.n_shared, 1))
+                               + d * m.n_experts)  # router
+            n += dense_layers * 3 * d * (m.d_ff_dense or self.d_ff)
+            per_layer += 2 * d  # norms
+        n += per_layer * L + d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters active per token (MoE: routed top-k only)."""
+        if self.family != "moe":
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        moe_layers = self.n_layers - m.moe_layer_start
+        unused = moe_layers * (m.n_experts - m.top_k) * 3 * self.d_model * m.d_ff_expert
+        return full - unused
+
+
+# --------------------------------------------------------------------------- #
+# Input shapes (assigned)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic decode path); see DESIGN.md
+LONG_CONTEXT_ARCHS = ("mamba2-1.3b", "zamba2-2.7b", "gemma3-4b", "qwen3-4b")
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+
+ARCH_IDS = (
+    "zamba2-2.7b",
+    "qwen3-4b",
+    "qwen2-moe-a2.7b",
+    "gemma3-4b",
+    "qwen2-0.5b",
+    "deepseek-67b",
+    "mamba2-1.3b",
+    "musicgen-large",
+    "deepseek-v2-236b",
+    "internvl2-1b",
+)
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "p") for a in ARCH_IDS}
+# beyond-assignment variants (selectable but not part of the assigned matrix)
+_VARIANTS = {"qwen3-4b-swa": ("qwen3_4b", "CONFIG_SWA")}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    """Look up an architecture config by its dashed id (or any extra registered id)."""
+    if arch in _VARIANTS:
+        modname, attr = _VARIANTS[arch]
+        mod = importlib.import_module(f"repro.configs.{modname}")
+        return mod.REDUCED if reduced else getattr(mod, attr)
+    if arch not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch!r}; known: "
+                       f"{sorted(_MODULE_FOR) + sorted(_VARIANTS)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR[arch]}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def register(arch_id: str, module_name: str) -> None:
+    _MODULE_FOR[arch_id] = module_name
+
+
+def list_archs():
+    return list(_MODULE_FOR)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+def pairs_to_run():
+    """All (arch, shape) pairs of the assignment, with long_500k skips applied."""
+    out = []
+    for a in ARCH_IDS:
+        for s in INPUT_SHAPES.values():
+            if s.name == "long_500k" and a not in LONG_CONTEXT_ARCHS:
+                continue
+            out.append((a, s.name))
+    return out

@@ -1,0 +1,11 @@
+"""SAVIC — the paper's contribution: Local SGD with adaptivity via scaling.
+
+Public API:
+    PrecondConfig, SavicConfig     — configuration
+    savic.init_state / build_round_step — Algorithm 1
+    fedopt.*                       — the FedOpt baseline of [42]
+    theory.*                       — Theorem 1/2 predictors
+"""
+from repro.core.preconditioner import PrecondConfig  # noqa
+from repro.core.savic import SavicConfig, build_round_step, init_state  # noqa
+from repro.core import fedopt, theory, schedules  # noqa

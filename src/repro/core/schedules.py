@@ -1,0 +1,34 @@
+"""Step-size and β_t schedules, including the theory-driven choices of
+Corollaries 1-3."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(gamma):
+    return lambda t: gamma
+
+
+def inv_sqrt(gamma0, warmup=0):
+    def f(t):
+        t = jnp.maximum(t, 1)
+        g = gamma0 / jnp.sqrt(t)
+        if warmup:
+            g = jnp.where(t < warmup, gamma0 * t / warmup, g)
+        return g
+    return f
+
+
+def cosine(gamma0, total, floor=0.0):
+    def f(t):
+        frac = jnp.clip(t / total, 0.0, 1.0)
+        return floor + 0.5 * (gamma0 - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return f
+
+
+def corollary1_beta(rule: str, gamma, mu, alpha, Gamma):
+    """β_{t+1} lower bound from Corollary 1 that keeps the D-drift within
+    (1 + γμ/2Γ): rule (2) -> 1 - γμα²/Γ³ ; rule (3) -> 1 - γμα/4Γ²."""
+    if rule == "squared":
+        return max(0.0, 1.0 - gamma * mu * alpha**2 / Gamma**3)
+    return max(0.0, 1.0 - gamma * mu * alpha / (4.0 * Gamma**2))

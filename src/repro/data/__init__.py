@@ -1,0 +1,4 @@
+from repro.data.federated import (dirichlet_partition, heterogeneity_score,  # noqa
+                                  iid_partition, main_class_partition)
+from repro.data.loader import FederatedLoader, LMRoundLoader, QuadraticLoader  # noqa
+from repro.data.synthetic import ClassificationData, QuadraticProblem, TokenStream  # noqa

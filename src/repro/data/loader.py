@@ -1,0 +1,64 @@
+"""Client-sharded batching for SAVIC rounds.
+
+A SAVIC round consumes a batch whose leaves are (M, H, b, ...): H local
+microbatches of size b for each of M clients. ``FederatedLoader`` wraps a
+dataset + partition and yields such round-batches; ``LMRoundLoader`` does the
+same for token streams.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FederatedLoader:
+    def __init__(self, x, y, parts, batch_size: int, seed: int = 0):
+        self.x, self.y = x, y
+        self.parts = parts
+        self.b = batch_size
+        self.rng = np.random.default_rng(seed)
+
+    @property
+    def n_clients(self):
+        return len(self.parts)
+
+    def round_batch(self, H: int):
+        """Returns {"x": (M,H,b,D), "y": (M,H,b)}."""
+        M, b = self.n_clients, self.b
+        xs = np.empty((M, H, b) + self.x.shape[1:], dtype=self.x.dtype)
+        ys = np.empty((M, H, b), dtype=self.y.dtype)
+        for m, idx in enumerate(self.parts):
+            pick = self.rng.choice(idx, size=(H, b), replace=True)
+            xs[m] = self.x[pick]
+            ys[m] = self.y[pick]
+        return {"x": xs, "y": ys}
+
+
+class QuadraticLoader:
+    """Noise-only 'batches' for QuadraticProblem: each microbatch is a noise
+    vector added to the gradient (Assumption 2 with variance σ²)."""
+
+    def __init__(self, problem, seed: int = 0):
+        self.p = problem
+        self.rng = np.random.default_rng(seed)
+
+    def round_batch(self, H: int):
+        M, d = self.p.b.shape
+        z = self.rng.normal(size=(M, H, d)) * (self.p.sigma / np.sqrt(d))
+        cid = np.broadcast_to(np.arange(M, dtype=np.int32)[:, None], (M, H))
+        return {"z": z.astype(np.float32), "cid": np.ascontiguousarray(cid)}
+
+
+class LMRoundLoader:
+    def __init__(self, stream, n_clients: int, batch_size: int):
+        self.stream = stream
+        self.M = n_clients
+        self.b = batch_size
+
+    def round_batch(self, H: int, seq_len: int):
+        toks = np.empty((self.M, H, self.b, seq_len), np.int32)
+        labs = np.empty_like(toks)
+        for m in range(self.M):
+            for h in range(H):
+                t, l = self.stream.batch(self.b, seq_len)
+                toks[m, h], labs[m, h] = t, l
+        return {"tokens": toks, "labels": labs}

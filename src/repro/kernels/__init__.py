@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute spots.
+
+<name>.py    pl.pallas_call + BlockSpec implementations
+ops.py       jit'd public wrappers (interpret-mode autodetect on CPU)
+ref.py       pure-jnp oracles the kernels are tested against
+"""
+from repro.kernels import ops, ref  # noqa

@@ -1,0 +1,66 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) every kernel runs in interpret mode — the kernel body
+executes in Python on CPU, which is the validation path; on TPU the same calls
+compile to Mosaic. ``REPRO_PALLAS_INTERPRET=0/1`` overrides autodetection.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import scaled_update as _su
+from repro.kernels import ssd_scan as _ssd
+from repro.utils.tree import tree_from_paths
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() == "cpu"
+
+
+def scaled_update(p, m, g, d, *, gamma, beta1, alpha, squared=True):
+    """Fused SAVIC step on arbitrarily-shaped arrays."""
+    shape = p.shape
+    flat = lambda x: x.reshape(-1).astype(jnp.float32)
+    po, mo = _su.scaled_update_flat(flat(p), flat(m), flat(g), flat(d),
+                                    gamma=float(gamma), beta1=float(beta1),
+                                    alpha=float(alpha), squared=squared,
+                                    interpret=_interpret())
+    return po.reshape(shape).astype(p.dtype), mo.reshape(shape).astype(m.dtype)
+
+
+def scaled_update_tree(params, mom, d_tree, gamma, alpha, squared=True):
+    """Tree version used by core/savic.py (beta1 pre-applied in mom)."""
+    out_p, out_m = {}, {}
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(mom)
+    flat_d = jax.tree.leaves(d_tree)
+    treedef = jax.tree.structure(params)
+    news = [scaled_update(p, jnp.zeros_like(m), m, d, gamma=gamma, beta1=0.0,
+                          alpha=alpha, squared=squared)[0]
+            for p, m, d in zip(flat_p, flat_m, flat_d)]
+    return jax.tree.unflatten(treedef, news)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    bq=128, bk=128):
+    """(B,S,H,D) layout in, (B,S,H,D) out (transposes to kernel layout)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    ot = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                  softcap=softcap, bq=bq, bk=bk,
+                                  interpret=_interpret())
+    return ot.transpose(0, 2, 1, 3)
+
+
+def ssd(xh, dt, A, Bm, Cm, *, chunk):
+    """Chunked SSD via the Pallas intra-chunk kernel + host inter-chunk scan."""
+    return _ssd.ssd_kernel_forward(xh, dt, A, Bm, Cm, chunk,
+                                   interpret=_interpret())

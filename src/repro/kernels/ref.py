@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract each kernel must
+match under assert_allclose across shape/dtype sweeps — see tests/test_kernels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scaled_update_ref(p, m, g, d, *, gamma, beta1, alpha, squared=True):
+    m_new = beta1 * m + g
+    mag = jnp.sqrt(d) if squared else jnp.abs(d)
+    dhat = jnp.maximum(alpha, mag)
+    return p - gamma * m_new / dhat, m_new
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q (B,H,S,D), k/v (B,Hk,S,D) -> (B,H,S,D). Dense fp32 softmax."""
+    B, H, S, D = q.shape
+    Hk = k.shape[1]
+    rep = H // Hk
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * D**-0.5, kf)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    i = jnp.arange(S)
+    mask = i[None, :] <= i[:, None]
+    if window:
+        mask &= (i[:, None] - i[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(xh, dt, A, Bm, Cm):
+    """Naive sequential SSD recurrence (see models/ssm.ssd_reference)."""
+    from repro.models.ssm import ssd_reference
+    return ssd_reference(xh, dt, A, Bm, Cm)

@@ -1,0 +1,60 @@
+"""Fused SAVIC local step — Pallas TPU kernel.
+
+The paper's inner loop is elementwise and memory-bound:
+
+    m' = β₁ m + g
+    D̂  = max(α, √d)   (rule-2 state)  or  max(α, |d|)  (rule-3 state)
+    p' = p − γ m' / D̂
+
+Unfused, XLA emits ~6 HBM reads + 4 writes per element across several loop
+nests; fused we do 4 reads (p, m, g, d) + 2 writes (p', m') in one pass —
+~1.7× less HBM traffic on the optimizer step, which runs H times per round on
+every client. Blocks are flat (BLOCK,) slices, BLOCK = 8·128·16 lanes so each
+VMEM working set is ~6·BLOCK·4B ≈ 400 KiB ≪ 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128 * 16
+
+
+def _kernel(p_ref, m_ref, g_ref, d_ref, po_ref, mo_ref, *, gamma, beta1,
+            alpha, squared):
+    m = beta1 * m_ref[...] + g_ref[...]
+    d = d_ref[...]
+    mag = jnp.sqrt(d) if squared else jnp.abs(d)
+    dhat = jnp.maximum(alpha, mag)
+    po_ref[...] = p_ref[...] - gamma * m / dhat
+    mo_ref[...] = m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "beta1", "alpha", "squared",
+                                    "interpret"))
+def scaled_update_flat(p, m, g, d, *, gamma, beta1, alpha, squared=True,
+                       interpret=False):
+    """Flat fp32 arrays (n,) -> (p', m'). Pads to BLOCK internally."""
+    n = p.shape[0]
+    npad = (BLOCK - n % BLOCK) % BLOCK
+    if npad:
+        pad = lambda x, v: jnp.concatenate([x, jnp.full((npad,), v, x.dtype)])
+        p, m, g = pad(p, 0), pad(m, 0), pad(g, 0)
+        d = pad(d, 1.0)  # keep D̂ away from 0 in the padding
+    grid = (p.shape[0] // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    kern = functools.partial(_kernel, gamma=gamma, beta1=beta1, alpha=alpha,
+                             squared=squared)
+    po, mo = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 2,
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype)] * 2,
+        interpret=interpret,
+    )(p, m, g, d)
+    return po[:n], mo[:n]

@@ -1,0 +1,122 @@
+"""Mamba2 SSD intra-chunk kernel — Pallas TPU.
+
+Computes, per (batch, chunk, head) grid cell, the chunk-local SSD quantities
+(the MXU-heavy part of state-space duality):
+
+    cum      = cumsum(dA)                          (Q,)
+    L        = exp(cum_i - cum_j) · 1[i>=j]        (Q, Q)
+    Y_diag   = ((C Bᵀ) ⊙ L) (x·dt)                 (Q, P)
+    S_chunk  = Bᵀ diag(exp(cum_Q - cum)) (x·dt)    (N, P)
+    total    = exp(cum_Q)                          scalar
+
+The sequential inter-chunk recurrence (nc steps, O(N·P) each) stays a host
+``lax.scan`` — it is trivially cheap and latency-bound, not kernel-worthy.
+Grid (B·nc, H): each cell's VMEM = Q·N·2 + Q·P·2 + Q·Q floats ≈ 0.9 MiB at
+Q=256, N=128, P=64 — well inside VMEM, MXU contractions all ≥128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, tot_ref, *, Q):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0]                                     # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+
+    dA = dt * A                                      # (Q,)
+    cum = jnp.cumsum(dA)                             # (Q,)
+    xdt = x * dt[:, None]                            # (Q, P)
+
+    diff = cum[:, None] - cum[None, :]               # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    mask = ii >= jj
+    Lm = jnp.exp(jnp.where(mask, diff, -1e30)) * mask  # mask pre-exp (no inf)
+
+    G = Cm @ Bm.T                                    # (Q, Q)  MXU
+    y_ref[0, :, 0, :] = ((G * Lm) @ xdt).astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cum[-1] - cum)               # (Q,)
+    s_ref[0, 0] = (Bm.T @ (xdt * decay_out[:, None])).astype(s_ref.dtype)
+    tot_ref[0, 0] = jnp.exp(cum[-1]).astype(tot_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk(xh, dt, A, Bm, Cm, *, chunk, interpret=False):
+    """xh (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,H,N), S % chunk == 0.
+
+    Returns (Y_diag (B,S,H,P), S_chunk (B,nc,H,N,P), total (B,nc,H)) — feed to
+    the host inter-chunk scan (models/ssm.ssd_chunked does the same math in
+    pure JAX; kernels/ref.py wraps it as the oracle).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    nc = S // Q
+    grid = (B * nc, H)
+
+    def idx4(i, h):       # (B,S,H,{P,N}) blocked to (1,Q,1,*)
+        return (i // nc, i % nc, h, 0)
+
+    def idx3(i, h):       # (B,S,H) blocked to (1,Q,1)
+        return (i // nc, i % nc, h)
+
+    y, s, tot = pl.pallas_call(
+        functools.partial(_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), idx4),
+            pl.BlockSpec((1, Q, 1), idx3),
+            pl.BlockSpec((1,), lambda i, h: (h,)),
+            pl.BlockSpec((1, Q, 1, N), idx4),
+            pl.BlockSpec((1, Q, 1, N), idx4),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), idx4),
+            pl.BlockSpec((1, 1, N, P), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, h: (i, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B * nc, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xh, dt, A, Bm, Cm)
+    return y, s.reshape(B, nc, H, N, P), tot.reshape(B, nc, H)
+
+
+def ssd_kernel_forward(xh, dt, A, Bm, Cm, chunk, interpret=False):
+    """Full SSD using the Pallas intra-chunk kernel + host inter-chunk scan.
+    Drop-in equal to models.ssm.ssd_chunked (tested against it)."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    Yd, S_c, total = ssd_intra_chunk(xh, dt, A, Bm, Cm, chunk=chunk,
+                                     interpret=interpret)
+
+    def step(h, xs):
+        s_c, tot = xs
+        return tot[..., None, None] * h + s_c, h
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    # S_c is (B,nc,H,N,P) -> scan over nc with (B,H,P,N) states
+    s_cs = S_c.transpose(1, 0, 2, 4, 3)              # (nc,B,H,P,N)
+    tots = total.transpose(1, 0, 2)                  # (nc,B,H)
+    h_fin, h_prevs = jax.lax.scan(step, h0, (s_cs, tots))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+
+    dA = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
+    cum = jnp.cumsum(dA.reshape(B, nc, chunk, H), axis=2)
+    decay_in = jnp.exp(cum)                          # (B,nc,Q,H)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, chunk, H, N)
+    Y_off = jnp.einsum("bcihn,bcih,bchpn->bcihp", Cc, decay_in, h_prevs)
+    y = Yd.reshape(B, nc, chunk, H, P) + Y_off
+    return y.reshape(B, S, H, P), h_fin

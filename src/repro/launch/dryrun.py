@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); 512 placeholder host devices back the production meshes
+(16,16) and (2,16,16).
+
+Per pair this records into results/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis()  — per-device argument/output/temp/code bytes
+  * cost_analysis()    — HLO FLOPs + bytes accessed (roofline numerators)
+  * collective operand bytes by kind (parsed from optimized HLO)
+  * compile wall time, mode (paper/plain), clients M, analytic param count
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all                 # single-pod sweep
+  python -m repro.launch.dryrun --all --multi-pod     # 2-pod sweep
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, get_shape, pairs_to_run
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.utils.hlo import collective_bytes, op_census
+from repro.utils.hlo_cost import analyze as hlo_analyze
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            mode: str = "auto", out_dir: str = "results/dryrun",
+            save: bool = True, call=None, tag: str = "", verbose=True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = get_shape(shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": mesh.devices.size, "tag": tag,
+    }
+    t0 = time.time()
+    built = build_step(arch, shape_name, mesh, mode=mode, call=call) \
+        if shape.kind == "train" else build_step(arch, shape_name, mesh,
+                                                 call=call)
+    with mesh:
+        jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings,
+                         donate_argnums=built.donate)
+        lowered = jitted.lower(*built.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_total, coll_kind, coll_count = collective_bytes(hlo)
+    tc = hlo_analyze(hlo)   # trip-count-corrected (scans execute L·H times)
+
+    cfg = get_config(arch)
+    rec.update({
+        "kind": shape.kind,
+        "mode": built.meta.get("mode", "serve"),
+        "clients": built.meta.get("clients", 0),
+        "h_local": built.meta.get("h_local", 0),
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        # raw cost_analysis (while bodies counted ONCE — kept for reference)
+        "flops_raw": cost.get("flops", 0.0),
+        "bytes_raw": cost.get("bytes accessed", 0.0),
+        # trip-count-corrected HLO analysis (the roofline numerators)
+        "flops": tc["flops"],
+        "bytes_accessed": tc["bytes"],
+        "collective_bytes": tc["collective_bytes"],
+        "collective_by_kind": tc["collective_by_kind"],
+        "collective_counts": tc["collective_counts"],
+        "unknown_trip_loops": tc["unknown_trip_loops"],
+        "collective_bytes_static": coll_total,
+        "collective_by_kind_static": coll_kind,
+        "memory": {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "op_census": op_census(hlo),
+        "ok": True,
+    })
+    if verbose:
+        print(f"[dryrun] {arch:18s} {shape_name:12s} mesh={rec['mesh']:8s} "
+              f"mode={rec['mode']:6s} flops={rec['flops']:.3e} "
+              f"coll={coll_total/1e9:.2f}GB compile={rec['compile_s']:.1f}s",
+              flush=True)
+    if save:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{rec['mesh']}"
+        if tag:
+            name += f"__{tag}"
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="auto")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch, shape in pairs_to_run():
+            try:
+                run_one(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
+                        out_dir=args.out, tag=args.tag)
+            except Exception as e:  # noqa
+                failures.append((arch, shape, repr(e)))
+                print(f"[dryrun] FAIL {arch} {shape}: {e}", flush=True)
+                traceback.print_exc()
+        print(f"[dryrun] done; {len(failures)} failures")
+        for f in failures:
+            print("  FAIL:", *f)
+        raise SystemExit(1 if failures else 0)
+
+    run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
+            out_dir=args.out, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

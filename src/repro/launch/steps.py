@@ -1,0 +1,260 @@
+"""Step builders: (arch × input-shape × mesh × mode) -> jit-able function +
+abstract inputs + shardings.  Shared by dryrun.py, train.py, serve.py and the
+benchmarks.
+
+Shape kinds:
+* train   -> SAVIC ``round_step``  (H local steps × M clients + sync)
+* prefill -> ``prefill`` (full forward, returns last logits + KV cache)
+* decode  -> ``serve_step`` (ONE new token against a seq_len KV cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, get_config, get_shape
+from repro.core import PrecondConfig, SavicConfig, savic
+from repro.models import ModelCallConfig, batch_struct, build
+from repro.sharding import (AxisPlan, batch_pspecs, cache_pspecs,
+                            params_pspecs, plan_for, serve_batch_pspecs)
+
+# archs whose full replica does not fit a 16-chip model group in fp32 training
+# (plain mode: M=1, params FSDP-sharded over the data axis; see DESIGN.md §2)
+BIG_ARCHS = ("deepseek-67b", "deepseek-v2-236b")
+
+# decode window (ring-buffer KV) used in the long_500k shape on windowed archs
+LONG_DECODE_WINDOW = 8192
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                   # jit-able python callable
+    args: tuple               # abstract ShapeDtypeStructs (or concrete arrays)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _train_plan(arch: str, mesh, mode: str = "auto") -> AxisPlan:
+    multi = "pod" in mesh.axis_names
+    if mode == "auto":
+        mode = "plain" if arch in BIG_ARCHS else "paper"
+    return plan_for(mode, multi), mode
+
+
+def savic_round_h(shape: ShapeConfig) -> int:
+    return 8  # local steps per round lowered in the dry-run (scan: HLO-size free)
+
+
+def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
+                     pc_kind: str = "adam", call: Optional[ModelCallConfig] = None,
+                     reduced: bool = False, h_local: Optional[int] = None,
+                     sv: Optional[SavicConfig] = None):
+    cfg = get_config(arch, reduced=reduced)
+    plan, mode = _train_plan(arch, mesh, mode)
+    if call is None:
+        call = ModelCallConfig()
+    if mode in ("paper_fsdp", "plain") and call.act_shard is None:
+        # pin batch-parallel activations (otherwise the d-sharded embedding
+        # wins GSPMD propagation and attention replicates; see EXPERIMENTS §Perf)
+        spec = P(tuple(plan.batch), None, None)
+        call = dataclasses.replace(
+            call, act_shard=lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec)))
+    if cfg.moe and call.moe_shard is None:
+        call = dataclasses.replace(
+            call, moe_shard=_moe_shard_fn(cfg, mesh, plan))
+    model = build(cfg, call)
+    M = plan.clients(mesh) if plan.client else 1
+    assert shape.global_batch % M == 0, (shape.global_batch, M)
+    b_client = shape.global_batch // M
+    H = h_local or savic_round_h(shape)
+
+    pc = PrecondConfig(kind=pc_kind, alpha=1e-8)
+    sv = sv or SavicConfig(gamma=3e-4, beta1=0.9)
+    round_step = savic.build_round_step(model.loss, pc, sv)
+
+    def step(state, batch):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), state["round"])
+        return round_step(state, batch, key)
+
+    # ---- abstract state & batch ----------------------------------------------
+    state_shape = jax.eval_shape(
+        partial(savic.init_state, init_params_fn=model.init, pc_cfg=pc,
+                sv_cfg=sv, n_clients=M), jax.random.PRNGKey(0))
+    micro = batch_struct(cfg, b_client, shape.seq_len)
+    batch_shape = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((M, H) + s.shape, s.dtype), micro)
+
+    # ---- shardings ------------------------------------------------------------
+    pspec_m = params_pspecs(cfg, state_shape["params"], mesh, plan,
+                            client_dim=True)
+    state_spec = {
+        "params": pspec_m,
+        "mom": pspec_m,
+        "precond": _precond_spec(cfg, state_shape["precond"], mesh, plan,
+                                 local=False),
+        "round": P(),
+    }
+    batch_spec = batch_pspecs(batch_shape, mesh, plan, client_dim=True)
+    metrics_shape = jax.eval_shape(step, state_shape, batch_shape)[1]
+    metrics_spec = jax.tree.map(lambda _: P(), metrics_shape)
+    metrics_spec["loss_per_client"] = P(plan.client if plan.client else None)
+
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return BuiltStep(
+        fn=step,
+        args=(state_shape, batch_shape),
+        in_shardings=(ns(state_spec), ns(batch_spec)),
+        out_shardings=(ns(state_spec), ns(metrics_spec)),
+        donate=(0,),
+        meta={"mode": mode, "clients": M, "h_local": H,
+              "b_client": b_client, "cfg": cfg, "plan": plan},
+    )
+
+
+def _moe_shard_fn(cfg, mesh, plan):
+    """Constraint for the (B, E, C, d/f) MoE buffers: batch over batch(+client
+    when M=1 plain) axes, experts over model axes when divisible."""
+    baxes = tuple(plan.batch) or None
+    E = cfg.moe.n_experts
+    n_mdl = 1
+    for a in plan.model:
+        n_mdl *= mesh.shape[a]
+    eaxes = tuple(plan.model) if (plan.model and E % n_mdl == 0) else None
+
+    def f(x, where="dispatch"):
+        e = eaxes if where == "dispatch" else None
+        spec = P(baxes, e, *([None] * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return f
+
+
+def _precond_spec(cfg, precond_shape, mesh, plan, local):
+    spec = {"t": P()}
+    if "d" in precond_shape:
+        # global D: replicated across clients (no client dim), sharded like a
+        # single replica's params
+        spec["d"] = params_pspecs(cfg, precond_shape["d"], mesh, plan,
+                                  client_dim=local)
+    return spec
+
+
+def _serve_plan(arch: str, mesh) -> AxisPlan:
+    multi = "pod" in mesh.axis_names
+    batch = ("pod", "data") if multi else ("data",)
+    fsdp = arch in BIG_ARCHS
+    return AxisPlan(client=(), batch=batch, model=("model",),
+                    fsdp_params=fsdp)
+
+
+def _serve_call(arch: str, shape: ShapeConfig, call: Optional[ModelCallConfig]):
+    if call is not None:
+        return call
+    window = LONG_DECODE_WINDOW if shape.name == "long_500k" else 0
+    return ModelCallConfig(decode_window=window)
+
+
+def _bf16_params(params_shape):
+    """Serving stores weights in bf16 (training keeps fp32 masters)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        params_shape)
+
+
+def build_prefill_step(arch: str, shape: ShapeConfig, mesh, *,
+                       call: Optional[ModelCallConfig] = None,
+                       reduced: bool = False):
+    cfg = get_config(arch, reduced=reduced)
+    call = call or ModelCallConfig()
+    plan = _serve_plan(arch, mesh)
+    if cfg.moe and call.moe_shard is None:
+        call = dataclasses.replace(call,
+                                   moe_shard=_moe_shard_fn(cfg, mesh, plan))
+    model = build(cfg, call)
+
+    params_shape = _bf16_params(jax.eval_shape(model.init,
+                                               jax.random.PRNGKey(0)))
+    batch_shape = batch_struct(cfg, shape.global_batch, shape.seq_len)
+    # labels unused in prefill; keep specs uniform anyway
+    pspec = params_pspecs(cfg, params_shape, mesh, plan, client_dim=False)
+    bspec = serve_batch_pspecs(batch_shape, mesh, plan)
+
+    out_shape = jax.eval_shape(model.prefill, params_shape, batch_shape)
+    logits_spec = P(tuple(plan.batch), None)
+    cache_spec = cache_pspecs(cfg, out_shape[1], mesh, plan)
+
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return BuiltStep(
+        fn=model.prefill,
+        args=(params_shape, batch_shape),
+        in_shardings=(ns(pspec), ns(bspec)),
+        out_shardings=(ns(logits_spec), ns(cache_spec)),
+        meta={"cfg": cfg, "plan": plan},
+    )
+
+
+def build_serve_step(arch: str, shape: ShapeConfig, mesh, *,
+                     call: Optional[ModelCallConfig] = None,
+                     reduced: bool = False):
+    """ONE-token decode against a seq_len-deep KV cache."""
+    cfg = get_config(arch, reduced=reduced)
+    call = _serve_call(arch, shape, call)
+    plan = _serve_plan(arch, mesh)
+    if cfg.moe and call.moe_shard is None:
+        call = dataclasses.replace(call,
+                                   moe_shard=_moe_shard_fn(cfg, mesh, plan))
+    model = build(cfg, call)
+    B = shape.global_batch
+
+    params_shape = _bf16_params(jax.eval_shape(model.init,
+                                               jax.random.PRNGKey(0)))
+    cache_shape = jax.eval_shape(partial(model.init_cache, B, shape.seq_len))
+    token_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+
+    pspec = params_pspecs(cfg, params_shape, mesh, plan, client_dim=False)
+    cspec = cache_pspecs(cfg, cache_shape, mesh, plan)
+    tok_spec = P(tuple(plan.batch)) if B % _ax(mesh, plan.batch) == 0 else P(None)
+    logits_spec = P(tok_spec[0] if tok_spec != P(None) else None, None)
+
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return BuiltStep(
+        fn=serve_step,
+        args=(params_shape, cache_shape, token_shape, pos_shape),
+        in_shardings=(ns(pspec), ns(cspec), ns(tok_spec), ns(P())),
+        out_shardings=(ns(logits_spec), ns(cspec)),
+        donate=(1,),
+        meta={"cfg": cfg, "plan": plan,
+              "decode_window": call.decode_window},
+    )
+
+
+def _ax(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def build_step(arch: str, shape_name: str, mesh, **kw):
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        return build_train_step(arch, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(arch, shape, mesh, **kw)
+    return build_serve_step(arch, shape, mesh, **kw)

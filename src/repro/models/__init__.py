@@ -1,0 +1,1 @@
+from repro.models.model import Model, ModelCallConfig, batch_struct, build, sample_batch  # noqa

@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a per-token latent c_kv (kv_lora_rank) plus a single
+shared RoPE key head (qk_rope_head_dim). The decode cache stores only
+(c_kv, k_pe) — 512+64 floats/token for the full config — which is MLA's
+memory win over GQA.
+
+Two decode paths:
+* ``naive``  — reconstruct K/V from the latent each step (faithful baseline).
+* ``absorbed`` — fold W_uk into the query and W_uv into the output projection
+  so attention runs directly in latent space (DeepSeek-V2's inference
+  optimization; our beyond-paper §Perf lever for decode shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.layers import (_dense_init, _sdpa_chunked, _sdpa_dense,
+                                 apply_rope, init_rmsnorm, linear, rmsnorm,
+                                 rope_cos_sin)
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+
+    def hproj(k, r, nd):
+        # head-major 3D (r, H, nd): the head dim is sharded explicitly; flat
+        # (r, H*nd) weights lose the head sharding through the reshape and
+        # the score einsum degenerates to contraction-sharding + all-reduce
+        # of the full logits (measured 260 TB/device/round on deepseek-v2
+        # train_4k before this layout — EXPERIMENTS §Perf).
+        return {"w": jax.random.normal(k, (r, H, nd), dtype) * r ** -0.5}
+
+    return {
+        "wq_a": _dense_init(ks[0], d, m.q_lora_rank, dtype=dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dtype),
+        "wq_b": hproj(ks[1], m.q_lora_rank, qk),
+        "wkv_a": _dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                             dtype=dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+        "wk_b": hproj(ks[3], m.kv_lora_rank, m.qk_nope_head_dim),
+        "wv_b": hproj(ks[4], m.kv_lora_rank, m.v_head_dim),
+        "wo": {"w": jax.random.normal(ks[5], (H, m.v_head_dim, d), dtype)
+               * (H * m.v_head_dim) ** -0.5},
+    }
+
+
+def _hproj(p, x, dtype):
+    """x (B,S,r) @ (r,H,nd) -> (B,S,H,nd)."""
+    return jnp.einsum("bsr,rhn->bshn", x.astype(dtype), p["w"].astype(dtype))
+
+
+def _project_q(p, cfg, x, positions, dtype):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = _hproj(p["wq_b"], rmsnorm(p["q_norm"], linear(p["wq_a"], x, dtype),
+                                  cfg.norm_eps), dtype)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_pe = q[..., m.qk_nope_head_dim:]
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin).astype(dtype)
+    return q_nope, q_pe, (cos, sin)
+
+
+def _latent_kv(p, cfg, x, positions, dtype):
+    m = cfg.mla
+    kv = linear(p["wkv_a"], x, dtype)
+    c_kv = rmsnorm(p["kv_norm"], kv[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_pe = kv[..., m.kv_lora_rank:][..., None, :]            # (B,S,1,rope)
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    k_pe = apply_rope(k_pe, cos, sin).astype(dtype)[..., 0, :]
+    return c_kv, k_pe                                        # (B,S,r), (B,S,rope)
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, dtype, chunk=0):
+    """Full-sequence MLA (train / prefill). Returns y and the latent cache."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q_nope, q_pe, _ = _project_q(p, cfg, x, positions, dtype)
+    c_kv, k_pe = _latent_kv(p, cfg, x, positions, dtype)
+    k_nope = _hproj(p["wk_b"], c_kv, dtype)
+    v = _hproj(p["wv_b"], c_kv, dtype)
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    k = jnp.concatenate([k_nope, k_pe_b], -1)
+    if chunk and S > chunk:
+        # pad V's head dim up to QK's so one kernel handles both
+        from repro.models.flash import flash_attention_bshd
+        out = flash_attention_bshd(
+            q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                              (0, q.shape[-1] - v.shape[-1]))),
+            positions, positions, bq=chunk, bk=chunk)
+        out = out[..., : m.v_head_dim]
+    else:
+        out = _sdpa_dense(q, k, v, positions, positions, 0, 0.0)
+    y = jnp.einsum("bshv,hvd->bsd", out.astype(dtype),
+                   p["wo"]["w"].astype(dtype))
+    return y, (c_kv, k_pe)
+
+
+def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, kpe_cache, dtype,
+               absorbed=True):
+    """Decode one token against the latent cache.
+
+    ckv_cache (B,C,r), kpe_cache (B,C,rope); slot = pos (no ring buffer —
+    MLA archs are full-attention, long_500k is skipped for them).
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    C = ckv_cache.shape[1]
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_pe, _ = _project_q(p, cfg, x, posv, dtype)      # (B,1,H,*)
+    c_kv, k_pe = _latent_kv(p, cfg, x, posv, dtype)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+    kpe_cache = jax.lax.dynamic_update_slice(
+        kpe_cache, k_pe.astype(kpe_cache.dtype), (0, pos, 0))
+    idx = jnp.arange(C, dtype=jnp.int32)
+    valid = idx <= pos
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if absorbed:
+        # q_lat[h] = q_nope[h] @ W_uk[h]^T : attention in latent space
+        wk = p["wk_b"]["w"].astype(jnp.float32)      # (r, H, nope)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wk)
+        logits = (jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                             ckv_cache.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bkd->bhqk", q_pe.astype(jnp.float32),
+                               kpe_cache.astype(jnp.float32))) * scale
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv_cache.astype(jnp.float32))
+        wv = p["wv_b"]["w"].astype(jnp.float32)      # (r, H, v)
+        out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv)
+    else:
+        k_nope = _hproj(p["wk_b"], ckv_cache.astype(dtype), dtype)
+        v = _hproj(p["wv_b"], ckv_cache.astype(dtype), dtype)
+        kpe_b = jnp.broadcast_to(kpe_cache[:, :, None, :].astype(dtype),
+                                 (B, C, H, m.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_pe], -1)
+        k = jnp.concatenate([k_nope, kpe_b], -1)
+        k_pos = jnp.where(valid, idx, jnp.iinfo(jnp.int32).max)
+        out = _sdpa_dense(q, k, v, posv, k_pos, 0, 0.0, k_valid=valid)
+
+    y = jnp.einsum("bshv,hvd->bsd", out.astype(dtype),
+                   p["wo"]["w"].astype(dtype))
+    return y, ckv_cache, kpe_cache

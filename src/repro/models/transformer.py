@@ -1,0 +1,346 @@
+"""Decoder stacks for all assigned architecture families.
+
+All stacks scan over layers (stacked parameters with a leading L dim) so HLO
+size — and dry-run compile time — is independent of depth. Per-layer
+structural variation (gemma3 local/global windows, zamba2's shared attention
+block every k layers) flows through the scan as per-layer scalars, not
+separate code paths.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import layers as Lyr
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import AttnCall, init_rmsnorm, mlp, rmsnorm
+
+HUGE_WINDOW = jnp.int32(2**30)
+
+
+# --------------------------------------------------------------------------- #
+# per-layer init
+# --------------------------------------------------------------------------- #
+
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    """One decoder block (uniform structure within a stack)."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_rmsnorm(d, dtype), "norm2": init_rmsnorm(d, dtype)}
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        p["mamba"] = SSM.init_mamba2(ks[0], cfg, dtype)
+        del p["norm2"]  # mamba block: single pre-norm
+        return p
+    if cfg.mla:
+        p["attn"] = MLA.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = Lyr.init_attention(ks[0], cfg, dtype)
+    if cfg.family == "moe":
+        p["ffn"] = MOE.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = Lyr.init_mlp(ks[1], d, cfg.d_ff, dtype)
+    return p
+
+
+def _init_dense_block(key, cfg: ModelConfig, dtype, d_ff):
+    """Dense-FFN block used for a MoE model's dense prefix layers."""
+    ks = jax.random.split(key, 2)
+    p = {"norm1": init_rmsnorm(cfg.d_model, dtype),
+         "norm2": init_rmsnorm(cfg.d_model, dtype)}
+    p["attn"] = MLA.init_mla(ks[0], cfg, dtype) if cfg.mla \
+        else Lyr.init_attention(ks[0], cfg, dtype)
+    p["ffn"] = Lyr.init_mlp(ks[1], cfg.d_model, d_ff, dtype)
+    return p
+
+
+def _init_shared_block(key, cfg: ModelConfig, dtype):
+    """zamba2: the single weight-tied attention+MLP block."""
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": Lyr.init_attention(ks[0], cfg, dtype),
+        "norm2": init_rmsnorm(cfg.d_model, dtype),
+        "ffn": Lyr.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_stack(key, cfg: ModelConfig, dtype=jnp.float32):
+    """All transformer-stack params: scanned stack + unscanned extras."""
+    L = cfg.n_layers
+    n_prefix = cfg.moe.moe_layer_start if (cfg.moe and cfg.moe.moe_layer_start) else 0
+    ks = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: _init_block(k, cfg, dtype))(
+        jax.random.split(ks[0], L - n_prefix))
+    p = {"stack": stacked}
+    if n_prefix:
+        d_ff = cfg.moe.d_ff_dense or cfg.d_ff
+        p["prefix"] = [
+            _init_dense_block(jax.random.fold_in(ks[1], i), cfg, dtype, d_ff)
+            for i in range(n_prefix)
+        ]
+    if cfg.hybrid_attn_every:
+        p["shared"] = _init_shared_block(ks[2], cfg, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# per-layer window schedule (gemma3 5:1)
+# --------------------------------------------------------------------------- #
+
+
+def layer_windows(cfg: ModelConfig, n_layers: int, force_window: int = 0):
+    """int32 (L,) per-layer window; HUGE_WINDOW means global."""
+    if force_window:
+        return jnp.full((n_layers,), force_window, jnp.int32)
+    if not cfg.sliding_window:
+        return jnp.full((n_layers,), HUGE_WINDOW, jnp.int32)
+    if not cfg.local_global_ratio:
+        return jnp.full((n_layers,), cfg.sliding_window, jnp.int32)
+    r = cfg.local_global_ratio
+    i = jnp.arange(n_layers)
+    is_global = (i % (r + 1)) == r
+    return jnp.where(is_global, HUGE_WINDOW, cfg.sliding_window).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+
+def _block_fwd(bp, cfg, x, positions, window, call: AttnCall, dtype,
+               want_cache):
+    """One uniform block. Returns (x, cache_leaf, aux)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm" or cfg.family == "hybrid":
+        h = SSM.mamba2_forward(bp["mamba"], cfg,
+                               rmsnorm(bp["norm1"], x, cfg.norm_eps), dtype)
+        return x + h, None, aux
+    h_in = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+    if cfg.mla:
+        h, kv = MLA.mla_attention(bp["attn"], cfg, h_in, positions, dtype,
+                                  chunk=call.chunk)
+    else:
+        c = AttnCall(window=window, softcap=call.softcap, chunk=call.chunk,
+                     use_flash_kernel=call.use_flash_kernel)
+        h, kv = Lyr.attention(bp["attn"], cfg, h_in, positions, c, dtype)
+    x = x + h
+    f_in = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+    if cfg.family == "moe" and "router" in bp["ffn"]:
+        f, aux = MOE.moe_apply(bp["ffn"], cfg, f_in, cfg.act, dtype,
+                               no_drop=getattr(call, "exact_moe", False),
+                               shard=getattr(call, "moe_shard", None))
+    else:
+        f = mlp(bp["ffn"], f_in, cfg.act, dtype)
+    x = x + f
+    cache = kv if want_cache else None
+    return x, cache, aux
+
+
+def forward(params, cfg: ModelConfig, x, positions, call: AttnCall, dtype,
+            want_cache=False, remat=True):
+    """x (B,S,d) residual stream -> (y, caches, aux_loss_sum).
+
+    caches: dict with stacked per-layer KV (attention archs), per-layer mamba
+    states (ssm/hybrid) and shared-block KV (hybrid), as applicable.
+    """
+    L = cfg.n_layers
+    n_prefix = cfg.moe.moe_layer_start if (cfg.moe and cfg.moe.moe_layer_start) else 0
+    caches = {}
+    aux_total = jnp.float32(0.0)
+
+    for i, bp in enumerate(params.get("prefix", [])):
+        x, kv, aux = _block_fwd(bp, cfg, x, positions,
+                                HUGE_WINDOW, call, dtype, want_cache)
+        aux_total += aux
+        if want_cache:
+            caches[f"prefix{i}"] = kv
+
+    wins = layer_windows(cfg, L - n_prefix, force_window=call.force_window
+                         if hasattr(call, "force_window") else 0)
+    every = cfg.hybrid_attn_every
+    shared = params.get("shared")
+
+    def layer(carry, xs):
+        x, aux_t = carry
+        bp, win, idx = xs
+        x, kv, aux = _block_fwd(bp, cfg, x, positions, win, call, dtype,
+                                want_cache)
+        if every:
+            def with_attn(x):
+                h = rmsnorm(shared["norm1"], x, cfg.norm_eps)
+                c = AttnCall(window=win, softcap=call.softcap, chunk=call.chunk)
+                h, skv = Lyr.attention(shared["attn"], cfg, h, positions, c, dtype)
+                x = x + h
+                f = mlp(shared["ffn"], rmsnorm(shared["norm2"], x, cfg.norm_eps),
+                        cfg.act, dtype)
+                return x + f, skv
+
+            def no_attn(x):
+                hk, hd = cfg.n_kv_heads, cfg.head_dim
+                z = jnp.zeros(x.shape[:2] + (hk, hd), dtype)
+                return x, (z, z)
+
+            x, skv = jax.lax.cond((idx % every) == (every - 1), with_attn,
+                                  no_attn, x)
+            kv = skv if want_cache else None
+        ys = kv if want_cache else None
+        return (x, aux_t + aux), ys
+
+    layer_fn = jax.checkpoint(layer) if remat else layer
+    xs = (params["stack"], wins, jnp.arange(L - n_prefix))
+    (x, aux_total), stack_kv = jax.lax.scan(layer_fn, (x, aux_total), xs)
+    if want_cache:
+        caches["stack"] = stack_kv
+    return x, caches, aux_total
+
+
+# --------------------------------------------------------------------------- #
+# decode (one token, cache carried)
+# --------------------------------------------------------------------------- #
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16):
+    """Abstract-safe cache construction for serve_step."""
+    L = cfg.n_layers
+    n_prefix = cfg.moe.moe_layer_start if (cfg.moe and cfg.moe.moe_layer_start) else 0
+    Ls = L - n_prefix
+    c = {}
+    if cfg.family in ("ssm", "hybrid"):
+        c["mamba"] = jax.vmap(lambda _: SSM.mamba2_init_cache(cfg, batch, dtype)
+                              )(jnp.arange(Ls))
+        if cfg.hybrid_attn_every:
+            napp = Ls // cfg.hybrid_attn_every
+            hk, hd = cfg.n_kv_heads, cfg.head_dim
+            c["shared_k"] = jnp.zeros((napp, batch, cache_len, hk, hd), dtype)
+            c["shared_v"] = jnp.zeros((napp, batch, cache_len, hk, hd), dtype)
+        return c
+    if cfg.mla:
+        m = cfg.mla
+        c["ckv"] = jnp.zeros((Ls, batch, cache_len, m.kv_lora_rank), dtype)
+        c["kpe"] = jnp.zeros((Ls, batch, cache_len, m.qk_rope_head_dim), dtype)
+        if n_prefix:
+            c["p_ckv"] = jnp.zeros((n_prefix, batch, cache_len, m.kv_lora_rank), dtype)
+            c["p_kpe"] = jnp.zeros((n_prefix, batch, cache_len,
+                                    m.qk_rope_head_dim), dtype)
+        return c
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    c["k"] = jnp.zeros((Ls, batch, cache_len, hk, hd), dtype)
+    c["v"] = jnp.zeros((Ls, batch, cache_len, hk, hd), dtype)
+    if n_prefix:
+        c["pk"] = jnp.zeros((n_prefix, batch, cache_len, hk, hd), dtype)
+        c["pv"] = jnp.zeros((n_prefix, batch, cache_len, hk, hd), dtype)
+    return c
+
+
+def decode(params, cfg: ModelConfig, x, pos, cache, call: AttnCall, dtype,
+           mla_absorbed=True):
+    """x (B,1,d), pos scalar -> (y (B,1,d), new cache)."""
+    L = cfg.n_layers
+    n_prefix = cfg.moe.moe_layer_start if (cfg.moe and cfg.moe.moe_layer_start) else 0
+    Ls = L - n_prefix
+    new_cache = dict(cache)
+
+    # ---- dense prefix layers (unscanned) -------------------------------------
+    for i, bp in enumerate(params.get("prefix", [])):
+        h_in = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        if cfg.mla:
+            h, ck, kp = MLA.mla_decode(bp["attn"], cfg, h_in, pos,
+                                       cache["p_ckv"][i], cache["p_kpe"][i],
+                                       dtype, absorbed=mla_absorbed)
+            new_cache["p_ckv"] = new_cache["p_ckv"].at[i].set(ck)
+            new_cache["p_kpe"] = new_cache["p_kpe"].at[i].set(kp)
+        else:
+            c = AttnCall(window=call.window, softcap=call.softcap)
+            h, kc, vc = Lyr.attention_decode(bp["attn"], cfg, h_in, pos,
+                                             cache["pk"][i], cache["pv"][i],
+                                             c, dtype)
+            new_cache["pk"] = new_cache["pk"].at[i].set(kc)
+            new_cache["pv"] = new_cache["pv"].at[i].set(vc)
+        x = x + h
+        x = x + mlp(bp["ffn"], rmsnorm(bp["norm2"], x, cfg.norm_eps), cfg.act,
+                    dtype)
+
+    wins = layer_windows(cfg, Ls, force_window=getattr(call, "force_window", 0))
+    every = cfg.hybrid_attn_every
+    shared = params.get("shared")
+
+    def layer(carry, xs):
+        x, lcache = carry
+        if cfg.family in ("ssm", "hybrid"):
+            bp, win, idx, mcache = xs
+            h_in = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            h, mnew = SSM.mamba2_decode(bp["mamba"], cfg, h_in, mcache, dtype)
+            x = x + h
+            if every:
+                def with_attn(args):
+                    x, sk, sv = args
+                    app = idx // every
+                    kc = jax.lax.dynamic_index_in_dim(sk, app, 0, keepdims=False)
+                    vc = jax.lax.dynamic_index_in_dim(sv, app, 0, keepdims=False)
+                    h_in = rmsnorm(shared["norm1"], x, cfg.norm_eps)
+                    c = AttnCall(window=win, softcap=call.softcap)
+                    h, kc, vc = Lyr.attention_decode(shared["attn"], cfg, h_in,
+                                                     pos, kc, vc, c, dtype)
+                    x = x + h
+                    x = x + mlp(shared["ffn"],
+                                rmsnorm(shared["norm2"], x, cfg.norm_eps),
+                                cfg.act, dtype)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, kc, app, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, vc, app, 0)
+                    return x, sk, sv
+
+                sk, sv = lcache
+                x, sk, sv = jax.lax.cond((idx % every) == (every - 1),
+                                         with_attn, lambda a: a, (x, sk, sv))
+                lcache = (sk, sv)
+            return (x, lcache), mnew
+        # attention families
+        bp, win, idx, kv = xs
+        h_in = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        if cfg.mla:
+            ck, kp = kv
+            h, ck, kp = MLA.mla_decode(bp["attn"], cfg, h_in, pos, ck, kp,
+                                       dtype, absorbed=mla_absorbed)
+            newkv = (ck, kp)
+        else:
+            kc, vc = kv
+            c = AttnCall(window=win, softcap=call.softcap)
+            h, kc, vc = Lyr.attention_decode(bp["attn"], cfg, h_in, pos, kc, vc,
+                                             c, dtype)
+            newkv = (kc, vc)
+        x = x + h
+        f_in = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        if cfg.family == "moe" and "router" in bp["ffn"]:
+            f, _ = MOE.moe_apply(bp["ffn"], cfg, f_in, cfg.act, dtype,
+                                 no_drop=getattr(call, "exact_moe", False),
+                                 shard=getattr(call, "moe_shard", None))
+        else:
+            f = mlp(bp["ffn"], f_in, cfg.act, dtype)
+        return (x + f, lcache), newkv
+
+    idxs = jnp.arange(Ls)
+    if cfg.family in ("ssm", "hybrid"):
+        lcache = ((cache["shared_k"], cache["shared_v"])
+                  if every else (jnp.zeros((), dtype), jnp.zeros((), dtype)))
+        xs = (params["stack"], wins, idxs, cache["mamba"])
+        (x, lcache), mnew = jax.lax.scan(layer, (x, lcache), xs)
+        new_cache["mamba"] = mnew
+        if every:
+            new_cache["shared_k"], new_cache["shared_v"] = lcache
+    elif cfg.mla:
+        xs = (params["stack"], wins, idxs, (cache["ckv"], cache["kpe"]))
+        (x, _), (ck, kp) = jax.lax.scan(layer, (x, None), xs)
+        new_cache["ckv"], new_cache["kpe"] = ck, kp
+    else:
+        xs = (params["stack"], wins, idxs, (cache["k"], cache["v"]))
+        (x, _), (kc, vc) = jax.lax.scan(layer, (x, None), xs)
+        new_cache["k"], new_cache["v"] = kc, vc
+    return x, new_cache

@@ -1,0 +1,1 @@
+from repro.optim.inner import adamw_step, sgd_step  # noqa

@@ -1,0 +1,27 @@
+"""Plain inner optimizers shared by examples and the FedOpt client loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_step(params, mom, grads, lr, beta1=0.9, weight_decay=0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    mom = jax.tree.map(lambda m, g: beta1 * m + g, mom, grads)
+    params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+    return params, mom
+
+
+def adamw_step(params, m, v, grads, lr, t, beta1=0.9, beta2=0.999, eps=1e-8,
+               weight_decay=0.0):
+    m = jax.tree.map(lambda a, g: beta1 * a + (1 - beta1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: beta2 * a + (1 - beta2) * g * g, v, grads)
+    tt = t.astype(jnp.float32) + 1.0
+    c1 = 1.0 - beta1 ** tt
+    c2 = 1.0 - beta2 ** tt
+    def upd(p, mi, vi):
+        return p - lr * (mi / c1) / (jnp.sqrt(vi / c2) + eps) \
+            - lr * weight_decay * p
+    params = jax.tree.map(upd, params, m, v)
+    return params, m, v

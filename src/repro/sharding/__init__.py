@@ -1,0 +1,3 @@
+from repro.sharding.partitioner import (AxisPlan, batch_pspecs, cache_pspecs,  # noqa
+                                        params_pspecs, plan_for,
+                                        serve_batch_pspecs, to_shardings)

@@ -1,0 +1,235 @@
+"""Sharding rules: params / optimizer state / batches / caches -> PartitionSpec.
+
+Axis semantics (see DESIGN.md §2): mesh axes are partitioned into
+``client_axes`` (SAVIC clients — cross-client traffic only at sync),
+``batch_axes`` (intra-client data parallel / FSDP) and ``model_axes``
+(tensor/expert parallel inside a replica).
+
+Parameters in SAVIC training carry a leading client dim M (sharded over
+``client_axes``); serving params have no client dim. Rules are path-based
+with config-aware divisibility checks: a dim is only sharded if divisible by
+the mesh-axes extent, so every assigned arch lowers on the fixed production
+mesh without uneven-sharding surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.utils.tree import tree_from_paths
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisPlan:
+    """How mesh axes are assigned to roles for a given run mode."""
+    client: Tuple[str, ...] = ()      # SAVIC client axes (M = prod of sizes)
+    batch: Tuple[str, ...] = ()       # intra-client DP/FSDP axes
+    model: Tuple[str, ...] = ("model",)
+    fsdp_params: bool = False         # additionally shard params over batch axes
+
+    def clients(self, mesh: Mesh) -> int:
+        m = 1
+        for a in self.client:
+            m *= mesh.shape[a]
+        return m
+
+
+def plan_for(mode: str, multi_pod: bool) -> AxisPlan:
+    """Canonical plans. mode: paper | paper_fsdp | diloco | plain."""
+    if mode == "paper":
+        client = ("pod", "data") if multi_pod else ("data",)
+        return AxisPlan(client=client, batch=(), model=("model",))
+    if mode == "paper_fsdp":
+        # SAVIC clients on data(+pod); INSIDE a client the 16 "model"-axis
+        # chips do batch-parallel + FSDP instead of TP — the right layout for
+        # archs whose head counts don't divide the model axis (beyond-paper
+        # §Perf optimization; see EXPERIMENTS.md).
+        client = ("pod", "data") if multi_pod else ("data",)
+        return AxisPlan(client=client, batch=("model",), model=(),
+                        fsdp_params=True)
+    if mode == "diloco":
+        if not multi_pod:
+            raise ValueError("diloco mode needs the multi-pod mesh (client=pod)")
+        return AxisPlan(client=("pod",), batch=("data",), model=("model",))
+    if mode == "plain":
+        batch = ("pod", "data") if multi_pod else ("data",)
+        return AxisPlan(client=(), batch=batch, model=("model",), fsdp_params=True)
+    raise ValueError(mode)
+
+
+def _axsize(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(axes: Sequence[str], dim: int, mesh: Mesh):
+    """Return axes tuple if dim divisible by their extent, else None."""
+    if not axes:
+        return None
+    return tuple(axes) if dim % _axsize(mesh, axes) == 0 else None
+
+
+def _param_spec(path: str, shape, cfg: ModelConfig, mesh: Mesh, plan: AxisPlan,
+                stacked: bool, client_dim: bool):
+    """PartitionSpec for one parameter leaf.
+
+    ``stacked``: leading layer dim (inside blocks/stack). ``client_dim``:
+    leading SAVIC client dim present.
+    """
+    mdl = plan.model
+    fsdp = plan.batch if plan.fsdp_params else ()
+
+    lead = []
+    if client_dim:
+        lead.append(tuple(plan.client) if plan.client else None)
+    core = list(shape[len(lead):])
+    if stacked:
+        lead.append(None)               # layer-scan dim never sharded
+        core = core[1:]
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    nd = len(core)
+    # ---- rules (most-specific first) ----------------------------------------
+    if re.search(r"experts/(wg|wu)$", path):        # (E, d, f)
+        e = _maybe(mdl, core[0], mesh)
+        if e:
+            return spec(e, _maybe(fsdp, core[1], mesh), None)
+        return spec(None, _maybe(fsdp, core[1], mesh), _maybe(mdl, core[2], mesh))
+    if re.search(r"experts/wd$", path):             # (E, f, d)
+        e = _maybe(mdl, core[0], mesh)
+        if e:
+            return spec(e, None, _maybe(fsdp, core[2], mesh))
+        return spec(None, _maybe(mdl, core[1], mesh), _maybe(fsdp, core[2], mesh))
+    if re.search(r"router/w$", path):               # (d, E) replicate
+        return spec(None, None)
+    if re.search(r"(wq_b|wk_b|wv_b)/w$", path) and nd == 3:  # MLA (r, H, nd)
+        return spec(None, _maybe(mdl, core[1], mesh), None)
+    if re.search(r"(wq|wk|wv)/w$", path) and nd == 3:   # (d, H, hd) head-major
+        return spec(_maybe(fsdp, core[0], mesh), _maybe(mdl, core[1], mesh),
+                    None)
+    if re.search(r"(wq|wk|wv)/b$", path) and nd == 2:   # (H, hd)
+        return spec(_maybe(mdl, core[0], mesh), None)
+    if re.search(r"wo/w$", path) and nd == 3:           # (H, hd, d)
+        return spec(_maybe(mdl, core[0], mesh), None,
+                    _maybe(fsdp, core[2], mesh))
+    if re.search(r"embed/(table)$", path):          # (V, d)
+        return spec(_maybe(mdl, core[0], mesh), _maybe(fsdp, core[1], mesh))
+    if re.search(r"embed/head$", path):             # (d, V)
+        return spec(_maybe(fsdp, core[0], mesh), _maybe(mdl, core[1], mesh))
+    if re.search(r"(wq|wq_b|wk_b|wv_b|wg|wu|wx|wz)/w$", path):   # (d_in, big)
+        return spec(_maybe(fsdp, core[0], mesh), _maybe(mdl, core[1], mesh))
+    if re.search(r"(wk|wv)/w$", path):              # kv proj: shard if divisible
+        return spec(_maybe(fsdp, core[0], mesh), _maybe(mdl, core[1], mesh))
+    if re.search(r"(wo|wd)/w$", path):              # (big, d)
+        return spec(_maybe(mdl, core[0], mesh), _maybe(fsdp, core[1], mesh))
+    if re.search(r"(wq_a|wkv_a|wB|wC|wdt)/w$", path):  # (d, small) replicate-ish
+        return spec(_maybe(fsdp, core[0], mesh), None)
+    if re.search(r"conv_x$", path):                 # (d_in, K)
+        return spec(_maybe(mdl, core[0], mesh), None)
+    if nd == 2:
+        return spec(None, None)
+    if nd == 1 or nd == 0:
+        return spec(*([None] * nd))
+    return spec(*([None] * nd))
+
+
+def params_pspecs(cfg: ModelConfig, params_shape, mesh: Mesh, plan: AxisPlan,
+                  client_dim: bool):
+    """PartitionSpec tree matching a params (shape-)tree."""
+
+    def one(path, leaf):
+        stacked = "/stack/" in f"/{path}/"
+        return _param_spec(path, leaf.shape, cfg, mesh, plan, stacked,
+                           client_dim)
+
+    return tree_from_paths(params_shape, one)
+
+
+def batch_pspecs(batch_shape, mesh: Mesh, plan: AxisPlan, client_dim: bool,
+                 has_h_dim: bool = True):
+    """SAVIC round batch (M, H, b, ...): client dim over client axes, H (local
+    steps) never sharded, per-client batch dim b over batch axes."""
+
+    def one(path, leaf):
+        dims = []
+        shape = leaf.shape
+        if client_dim:
+            dims.append(tuple(plan.client) if plan.client else None)
+        if has_h_dim:
+            dims.append(None)                      # H local-step dim
+        i = len(dims)
+        if len(shape) > i:
+            dims.append(_maybe(plan.batch, shape[i], mesh))
+        dims += [None] * (len(shape) - len(dims))
+        return P(*dims)
+
+    return tree_from_paths(batch_shape, one)
+
+
+def serve_batch_pspecs(batch_shape, mesh: Mesh, plan: AxisPlan):
+    """Serving inputs: batch dim over (client+batch) axes jointly if divisible,
+    else replicated (long_500k B=1)."""
+    axes = tuple(plan.client) + tuple(plan.batch)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        dims = [_maybe(axes, shape[0], mesh)] if shape else []
+        dims += [None] * (len(shape) - len(dims))
+        return P(*dims)
+
+    return tree_from_paths(batch_shape, one)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, mesh: Mesh, plan: AxisPlan):
+    """Decode caches.
+
+    Layout (L, B, S, H, D) or mamba state dicts. Strategy: shard batch over
+    (client+batch) axes when divisible; otherwise shard the sequence dim
+    (long_500k B=1 -> sequence-sharded KV, GSPMD inserts the online-softmax
+    collectives); shard heads/state over model axes when divisible.
+    """
+    daxes = tuple(plan.client) + tuple(plan.batch)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if "mamba" in path:
+            # (L, B, ...) state/conv tails: batch over daxes, heads over model
+            dims = [None, _maybe(daxes, shape[1], mesh)]
+            if "h" in path.split("/")[-1] and nd >= 3:
+                dims.append(_maybe(plan.model, shape[2], mesh))
+            dims += [None] * (nd - len(dims))
+            return P(*dims)
+        if nd >= 4:  # (L, B, S, H[, D]) attention KV / (napp,B,S,H,D) shared
+            b = _maybe(daxes, shape[1], mesh)
+            s = None if b else _maybe(daxes, shape[2], mesh)
+            h = _maybe(plan.model, shape[3], mesh)
+            dims = [None, b, s, h] + [None] * (nd - 4)
+            return P(*dims)
+        if nd == 3:  # (L, B, S) or (L, B, r) latents: (None, batch, seq?)
+            b = _maybe(daxes, shape[1], mesh)
+            s = None if b else _maybe(daxes, shape[2], mesh)
+            return P(None, b, s)
+        return P(*([None] * nd))
+
+    return tree_from_paths(cache_shape, one)
+
+
+def opt_state_like_params(pspecs):
+    """Optimizer state (momentum, preconditioner stats) shards like params."""
+    return pspecs
+
+
+def to_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

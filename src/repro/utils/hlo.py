@@ -1,0 +1,104 @@
+"""HLO post-processing: collective traffic + op census from compiled modules.
+
+``collective_bytes(hlo_text)`` sums *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute in
+the optimized, partitioned HLO — the §Roofline collective term's numerator.
+
+Optimized HLO prints operands untyped (``all-gather(%fusion.1)``), so operand
+bytes are derived from the typed *result* plus the replica-group size gs:
+
+    all-reduce          operand = result
+    all-to-all          operand = result
+    collective-permute  operand = result
+    all-gather          operand = result / gs   (result is the gathered buf)
+    reduce-scatter      operand = result * gs   (result is one shard)
+
+Sizes are per-device values (the SPMD module is per-partition); multiply by
+device count for fleet-wide traffic.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = <types> <opcode>(` — result types may be a tuple for -start forms
+_LINE_RE = re.compile(
+    r"=\s*(?P<types>[^=]*?)\s(?P<op>" + "|".join(_COLLECTIVES)
+    + r")(?P<async>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# replica_groups=[32,8]<=... (32 groups of 8) or explicit {{0,1},{2,3},...}
+_RG_COMPACT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _RG_COMPACT_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str):
+    """Returns (total_operand_bytes, per_kind dict, op_count dict)."""
+    per_kind = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m or m.group("async") == "-done":
+            continue
+        kind = m.group("op")
+        shapes = _SHAPE_RE.findall(m.group("types"))
+        res_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        gs = _group_size(line)
+        if kind == "all-gather":
+            op_bytes = res_bytes // max(gs, 1)
+        elif kind == "reduce-scatter":
+            op_bytes = res_bytes * gs
+        else:
+            op_bytes = res_bytes
+        per_kind[kind] += op_bytes
+        counts[kind] += 1
+    return sum(per_kind.values()), dict(per_kind), dict(counts)
+
+
+def op_census(hlo_text: str, top=15):
+    """Rough census of op kinds (fusion-aware enough for perf iteration)."""
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*[a-z0-9]+\[[0-9,]*\][^ ]*\s+([a-z][a-z0-9\-]{2,})\(",
+                      line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])
+
+
+def collective_lines(hlo_text: str, limit=40):
+    """The raw collective instructions (for perf-iteration eyeballing)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m and m.group("async") != "-done":
+            out.append(line.strip()[:220])
+            if len(out) >= limit:
+                break
+    return out

@@ -1,0 +1,88 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_map(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree)
+
+
+def tree_ones_like(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.ones_like(x, dtype=dtype or x.dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_sqnorm(a):
+    return tree_dot(a, a)
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.leaves(
+        jax.tree.map(lambda x, y: bool(jnp.allclose(x, y, rtol=rtol, atol=atol)), a, b)
+    )
+    return all(oks)
+
+
+def tree_paths(tree):
+    """Flattened ('/'-joined key path, leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def tree_from_paths(tree, fn):
+    """Map ``fn(path, leaf) -> new leaf`` over a tree, preserving structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    new = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        new.append(fn("/".join(keys), leaf))
+    return jax.tree_util.tree_unflatten(treedef, new)

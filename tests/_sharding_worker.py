@@ -1,0 +1,67 @@
+"""Subprocess worker for sharding tests (needs its own XLA device count —
+jax locks the device count at first init, so the main pytest process keeps 1
+device and this worker gets 8)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import PrecondConfig, SavicConfig, savic
+from repro.models import ModelCallConfig, build, sample_batch
+from repro.sharding import AxisPlan, batch_pspecs, params_pspecs
+
+
+def main(arch: str):
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         devices=jax.devices()[:8])
+    plan = AxisPlan(client=("data",), batch=(), model=("model",))
+    cfg = get_config(arch, reduced=True)
+    model = build(cfg, ModelCallConfig(dtype=jnp.float32))
+    pc = PrecondConfig(kind="adam", alpha=1e-6)
+    sv = SavicConfig(gamma=1e-3, beta1=0.9)
+    step = savic.build_round_step(model.loss, pc, sv)
+
+    M, H, B, S = 2, 2, 2, 32
+    state = savic.init_state(jax.random.PRNGKey(0), model.init, pc, sv, M)
+    micro = sample_batch(cfg, jax.random.PRNGKey(1), B, S)
+    batch = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None, None], (M, H) + x.shape), micro)
+    key = jax.random.PRNGKey(2)
+
+    # ---- single-device reference ---------------------------------------------
+    ref_state, ref_met = jax.jit(step)(state, batch, key)
+    ref_loss = float(ref_met["loss"])
+
+    # ---- sharded --------------------------------------------------------------
+    pspec = params_pspecs(cfg, jax.eval_shape(lambda: state["params"]), mesh,
+                          plan, client_dim=True)
+    dspec = params_pspecs(cfg, jax.eval_shape(lambda: state["precond"]["d"]),
+                          mesh, plan, client_dim=False)
+    state_spec = {"params": pspec, "mom": pspec,
+                  "precond": {"d": dspec, "t": P()}, "round": P()}
+    bspec = batch_pspecs(jax.eval_shape(lambda: batch), mesh, plan,
+                         client_dim=True)
+    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    with mesh:
+        sharded = jax.jit(step, in_shardings=(ns(state_spec), ns(bspec), None))
+        out_state, met = sharded(state, batch, key)
+    loss = float(met["loss"])
+    assert abs(loss - ref_loss) < 5e-3, (loss, ref_loss)
+
+    # params equal too (averaging and update independent of placement)
+    for a, b in zip(jax.tree.leaves(out_state["params"]),
+                    jax.tree.leaves(ref_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-4)
+    print(f"OK {arch} sharded_loss={loss:.5f} ref={ref_loss:.5f}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

@@ -1,0 +1,83 @@
+"""Data pipeline + checkpointing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import (ClassificationData, FederatedLoader, QuadraticProblem,
+                        TokenStream, dirichlet_partition, heterogeneity_score,
+                        iid_partition, main_class_partition)
+
+
+def test_main_class_partition_fractions():
+    d = ClassificationData.make(n=5000, n_classes=10, seed=0)
+    for frac in (0.3, 0.5, 0.7):
+        parts = main_class_partition(d.y, 10, frac, seed=1)
+        sizes = [len(p) for p in parts]
+        assert len(set(sizes)) == 1                      # equal sizes
+        for m, idx in enumerate(parts):
+            got = (d.y[idx] == m % 10).mean()
+            assert abs(got - frac) < 0.05, (m, got, frac)
+        # no duplicates across clients
+        allidx = np.concatenate(parts)
+        assert len(allidx) == len(set(allidx.tolist()))
+
+
+def test_heterogeneity_monotone_in_main_fraction():
+    d = ClassificationData.make(n=5000, n_classes=10, seed=0)
+    scores = [heterogeneity_score(d.y, main_class_partition(d.y, 10, f))
+              for f in (0.1, 0.3, 0.5, 0.7)]
+    assert scores == sorted(scores), scores
+
+
+def test_dirichlet_and_iid():
+    d = ClassificationData.make(n=4000, n_classes=10, seed=0)
+    p_iid = iid_partition(len(d.y), 8)
+    p_dir = dirichlet_partition(d.y, 8, alpha=0.1)
+    assert heterogeneity_score(d.y, p_dir) > heterogeneity_score(d.y, p_iid)
+
+
+def test_federated_loader_shapes():
+    d = ClassificationData.make(n=2000, n_classes=10)
+    parts = main_class_partition(d.y, 4, 0.5)
+    loader = FederatedLoader(d.x, d.y, parts, batch_size=8)
+    b = loader.round_batch(H=3)
+    assert b["x"].shape == (4, 3, 8, d.x.shape[1])
+    assert b["y"].shape == (4, 3, 8)
+
+
+def test_token_stream_learnable():
+    ts = TokenStream(128, seed=0)
+    toks, labs = ts.batch(4, 64)
+    assert toks.shape == (4, 64) and labs.shape == (4, 64)
+    assert (toks[:, 1:] == labs[:, :-1]).all()          # labels = next token
+    assert toks.max() < 128 and toks.min() >= 0
+
+
+def test_quadratic_sigma_dif():
+    p0 = QuadraticProblem.make(d=16, M=4, heterogeneity=0.0, sigma=0.5, seed=0)
+    p1 = QuadraticProblem.make(d=16, M=4, heterogeneity=3.0, sigma=0.5, seed=0)
+    assert p1.sigma_dif2() > p0.sigma_dif2()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+             "step": jnp.int32(7),
+             "nested": [jnp.ones((2,)), {"b": jnp.zeros((1,), jnp.bfloat16)}]}
+    save(str(tmp_path), 3, state)
+    save(str(tmp_path), 9, state)
+    assert latest_step(str(tmp_path)) == 9
+    out, step = restore(str(tmp_path), state)
+    assert step == 9
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert out["nested"][1]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc(tmp_path):
+    state = {"x": jnp.zeros((4,))}
+    for s in range(6):
+        save(str(tmp_path), s, state, keep=3)
+    import os
+    left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(left) == 3

@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [17, 4096, 8 * 128 * 16, 8 * 128 * 16 + 3,
+                               300_001])
+@pytest.mark.parametrize("squared", [True, False])
+def test_scaled_update_shapes(n, squared):
+    k = jax.random.key(n)
+    p, m, g = (jax.random.normal(jax.random.fold_in(k, i), (n,))
+               for i in range(3))
+    d = jax.random.uniform(jax.random.fold_in(k, 3), (n,), minval=0.0,
+                           maxval=4.0)
+    kw = dict(gamma=0.1, beta1=0.9, alpha=1e-3, squared=squared)
+    po, mo = ops.scaled_update(p, m, g, d, **kw)
+    pr, mr = ref.scaled_update_ref(p, m, g, d, **kw)
+    # near the α-clip 1/D̂ amplifies magnitudes — relative tolerance
+    np.testing.assert_allclose(np.asarray(po), np.asarray(pr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scaled_update_dtypes(dtype):
+    n = 5000
+    k = jax.random.key(0)
+    p, m, g = (jax.random.normal(jax.random.fold_in(k, i), (n,), dtype)
+               for i in range(3))
+    d = jax.random.uniform(jax.random.fold_in(k, 3), (n,), minval=0.1,
+                           maxval=2.0).astype(dtype)
+    po, _ = ops.scaled_update(p, m, g, d, gamma=0.1, beta1=0.9, alpha=1e-3)
+    pr, _ = ref.scaled_update_ref(p.astype(jnp.float32),
+                                  m.astype(jnp.float32),
+                                  g.astype(jnp.float32),
+                                  d.astype(jnp.float32),
+                                  gamma=0.1, beta1=0.9, alpha=1e-3)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(po, np.float32), np.asarray(pr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,S,H,Hk,D,bq,bk", [
+    (1, 128, 2, 2, 64, 64, 64),
+    (2, 256, 4, 2, 64, 128, 64),
+    (2, 256, 8, 1, 32, 64, 128),    # MQA
+    (1, 512, 2, 2, 128, 128, 128),
+])
+def test_flash_kernel_sweep(B, S, H, Hk, D, bq, bk):
+    k0 = jax.random.key(S + H)
+    q = jax.random.normal(jax.random.fold_in(k0, 1), (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(k0, 2), (B, S, Hk, D))
+    v = jax.random.normal(jax.random.fold_in(k0, 3), (B, S, Hk, D))
+    o = ops.flash_attention(q, k, v, bq=bq, bk=bk)
+    orf = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 100])
+def test_flash_kernel_window(window):
+    B, S, H, D = 2, 256, 2, 32
+    k0 = jax.random.key(window)
+    q, k, v = (jax.random.normal(jax.random.fold_in(k0, i), (B, S, H, D))
+               for i in range(3))
+    o = ops.flash_attention(q, k, v, window=window, bq=64, bk=64)
+    orf = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3),
+                            window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    B, S, H, D = 1, 256, 2, 64
+    k0 = jax.random.key(9)
+    q, k, v = (jax.random.normal(jax.random.fold_in(k0, i), (B, S, H, D),
+                                 jnp.bfloat16) for i in range(3))
+    o = ops.flash_attention(q, k, v, bq=128, bk=128)
+    orf = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32), rtol=0.05,
+                               atol=0.05)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+])
+def test_ssd_kernel_sweep(B, S, H, P, N, chunk):
+    k = jax.random.key(S)
+    xh = jax.random.normal(jax.random.fold_in(k, 0), (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 2), (H,)))
+    Bm = jax.random.normal(jax.random.fold_in(k, 3), (B, S, H, N))
+    Cm = jax.random.normal(jax.random.fold_in(k, 4), (B, S, H, N))
+    y, h = ops.ssd(xh, dt, A, Bm, Cm, chunk=chunk)
+    yr, hr = ref.ssd_ref(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-3,
+                               atol=2e-3)

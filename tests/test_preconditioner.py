@@ -1,0 +1,122 @@
+"""Property tests for the preconditioner family — Lemma 1 / Assumption 4."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.preconditioner import (PrecondConfig, beta_t, bounds, dhat,
+                                       grad_stat, hutchinson_diag, init_state,
+                                       precondition, update)
+
+KINDS = ["adam", "rmsprop", "adagrad", "oasis", "adahessian"]
+
+
+def _tree(vals):
+    return {"a": jnp.asarray(vals, jnp.float32)}
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    kind=st.sampled_from(["adam", "rmsprop", "oasis"]),
+    alpha=st.floats(1e-6, 1e-1),
+    gamma_cap=st.floats(0.5, 50.0),
+    steps=st.integers(1, 12),
+    data=st.data(),
+)
+def test_lemma1_bounds(kind, alpha, gamma_cap, steps, data):
+    """Item 1 of Lemma 1: with |H^t| ≤ Γ elementwise, D̂^t stays in [α, Γ']
+    where Γ' = max(Γ, D̂⁰=1): diagonal, non-negative, bounded."""
+    cfg = PrecondConfig(kind=kind, alpha=alpha)
+    d = 16
+    state = init_state(cfg, _tree(np.zeros(d)))
+    cap = max(gamma_cap, 1.0)
+    for _ in range(steps):
+        h = data.draw(st.lists(st.floats(-gamma_cap, gamma_cap),
+                               min_size=d, max_size=d))
+        h = np.asarray(h, np.float32)
+        stat = _tree(h**2) if cfg.rule == "squared" else _tree(np.abs(h))
+        state = update(cfg, state, stat)
+        dh = dhat(cfg, state)["a"]
+        assert np.all(np.asarray(dh) >= alpha - 1e-7)
+        assert np.all(np.asarray(dh) <= cap + alpha + 1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from(["rmsprop", "oasis"]),
+       beta=st.floats(0.5, 0.999))
+def test_lemma1_drift_ratio(kind, beta):
+    """Items 2/3: D̂^{t+1} ⪯ (1 + (1-β)C) D̂^t with C = Γ²/2α² (rule 2) or
+    2Γ/α (rule 3)."""
+    alpha, Gamma = 0.1, 2.0
+    cfg = PrecondConfig(kind=kind, alpha=alpha, beta2=beta)
+    rng = np.random.default_rng(0)
+    state = init_state(cfg, _tree(np.zeros(32)))
+    for _ in range(8):
+        prev = np.asarray(dhat(cfg, state)["a"])
+        h = rng.uniform(-Gamma, Gamma, size=32).astype(np.float32)
+        stat = _tree(h**2) if cfg.rule == "squared" else _tree(h)
+        state = update(cfg, state, stat)
+        cur = np.asarray(dhat(cfg, state)["a"])
+        C = Gamma**2 / (2 * alpha**2) if cfg.rule == "squared" \
+            else 2 * Gamma / alpha
+        ratio_bound = 1.0 + (1.0 - beta) * C
+        assert np.all(cur <= prev * ratio_bound + 1e-6)
+
+
+def test_identity_is_noop():
+    cfg = PrecondConfig(kind="identity")
+    state = init_state(cfg, _tree(np.ones(4)))
+    g = _tree(np.array([1.0, -2.0, 3.0, -4.0]))
+    out = precondition(cfg, state, g)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(g["a"]))
+
+
+def test_adam_debias_schedule():
+    """β_t = (β-β^{t+1})/(1-β^{t+1}) starts at β/(1+β)·... and -> β."""
+    cfg = PrecondConfig(kind="adam", beta2=0.999)
+    b0 = float(beta_t(cfg, jnp.int32(0)))
+    b_inf = float(beta_t(cfg, jnp.int32(10_000)))
+    assert b0 < b_inf < 0.999 + 1e-6
+    assert abs(b_inf - 0.999) < 1e-4
+
+
+def test_adagrad_accumulates():
+    cfg = PrecondConfig(kind="adagrad", alpha=1e-3)
+    state = init_state(cfg, _tree(np.zeros(3)))
+    for _ in range(5):
+        state = update(cfg, state, _tree(np.ones(3)))
+    # D² = 1 (init) + 5 -> D̂ = sqrt(6)
+    np.testing.assert_allclose(np.asarray(dhat(cfg, state)["a"]),
+                               np.sqrt(6.0), rtol=1e-5)
+
+
+def test_hutchinson_unbiased_on_quadratic():
+    """E[v ⊙ Qv] = diag(Q) exactly for Rademacher v on a quadratic."""
+    d = 12
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(d, d))
+    Q = (A @ A.T / d + np.eye(d)).astype(np.float32)
+
+    def loss(params, batch):
+        x = params["x"]
+        return 0.5 * x @ jnp.asarray(Q) @ x
+
+    params = {"x": jnp.asarray(rng.normal(size=d).astype(np.float32))}
+    ests = []
+    for i in range(200):
+        est = hutchinson_diag(loss, params, None, jax.random.PRNGKey(i))
+        ests.append(np.asarray(est["x"]))
+    mean = np.mean(ests, axis=0)
+    np.testing.assert_allclose(mean, np.diag(Q), rtol=0.25, atol=0.05)
+
+
+def test_bounds_reporting():
+    cfg = PrecondConfig(kind="rmsprop", alpha=0.01)
+    state = init_state(cfg, _tree(np.zeros(8)))
+    state = update(cfg, state, _tree(np.linspace(0, 4, 8) ** 2))
+    lo, hi = bounds(cfg, state)
+    assert float(lo) >= 0.01 - 1e-8
+    assert float(hi) <= np.sqrt(0.999 + 0.001 * 16.0) + 1e-5

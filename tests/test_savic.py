@@ -1,0 +1,211 @@
+"""SAVIC Algorithm-1 behaviour: equivalences, convergence, drift, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedopt
+from repro.core.preconditioner import PrecondConfig
+from repro.core import savic
+from repro.core.savic import SavicConfig
+from repro.data import QuadraticLoader, QuadraticProblem
+
+
+def _quad_loss(problem):
+    Q = jnp.asarray(problem.Q, jnp.float32)      # (M,d,d) — use client 0's Q
+    b = jnp.asarray(problem.b, jnp.float32)
+
+    def loss(params, micro):
+        x = params["x"]
+        # identical-data quadratic + unbiased noise in the linear term
+        return 0.5 * (x - b[0]) @ Q[0] @ (x - b[0]) + micro["z"] @ x
+
+    return loss
+
+
+def _run(problem, pc, sv, rounds=40, H=5, seed=0):
+    loss = _quad_loss(problem)
+    step = jax.jit(savic.build_round_step(loss, pc, sv))
+    M = problem.Q.shape[0]
+    state = savic.init_state(jax.random.PRNGKey(seed),
+                             lambda k: {"x": jnp.zeros(problem.b.shape[1])},
+                             pc, sv, M)
+    loader = QuadraticLoader(problem, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    hist = []
+    for r in range(rounds):
+        key, k = jax.random.split(key)
+        batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
+        state, met = step(state, batch, k)
+        hist.append(float(met["loss"]))
+    return state, hist, met
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return QuadraticProblem.make(d=24, M=4, mu=0.5, L=5.0, sigma=0.3, seed=0)
+
+
+def test_identity_matches_local_sgd_manual(problem):
+    """SAVIC with D=I and β₁=0 must reproduce hand-rolled Local SGD exactly."""
+    pc = PrecondConfig(kind="identity")
+    sv = SavicConfig(gamma=0.05, beta1=0.0)
+    loss = _quad_loss(problem)
+    step = savic.build_round_step(loss, pc, sv)
+    M, d = problem.b.shape
+    state = savic.init_state(jax.random.PRNGKey(0),
+                             lambda k: {"x": jnp.zeros(d)}, pc, sv, M)
+    loader = QuadraticLoader(problem, seed=0)
+    batch = jax.tree.map(jnp.asarray, loader.round_batch(3))
+    key = jax.random.PRNGKey(1)
+    new_state, _ = jax.jit(step)(state, batch, key)
+
+    # manual local SGD: x_m <- x_m - γ g, then average
+    Q0 = jnp.asarray(problem.Q[0], jnp.float32)
+    b0 = jnp.asarray(problem.b[0], jnp.float32)
+    xs = np.zeros((M, d), np.float32)
+    for h in range(3):
+        for m in range(M):
+            g = np.asarray(Q0 @ (xs[m] - b0)) + np.asarray(batch["z"][m, h])
+            xs[m] = xs[m] - 0.05 * g
+    avg = xs.mean(axis=0)
+    got = np.asarray(new_state["params"]["x"])
+    np.testing.assert_allclose(got, np.broadcast_to(avg, (M, d)), rtol=2e-5,
+                               atol=2e-6)
+
+
+def test_drift_zero_after_sync(problem):
+    pc = PrecondConfig(kind="adam", alpha=1e-4)
+    sv = SavicConfig(gamma=0.02, beta1=0.9)
+    state, _, met = _run(problem, pc, sv, rounds=3)
+    p = np.asarray(state["params"]["x"])
+    assert np.allclose(p, p[0:1], atol=1e-7), "clients identical after sync"
+    assert float(met["client_drift"]) > 0.0, "drift measured pre-sync"
+
+
+@pytest.mark.parametrize("kind", ["identity", "adam", "rmsprop", "oasis"])
+def test_convergence_all_preconditioners(problem, kind):
+    pc = PrecondConfig(kind=kind, alpha=1e-3)
+    sv = SavicConfig(gamma=0.03, beta1=0.0)
+    state, hist, _ = _run(problem, pc, sv, rounds=60)
+    x = np.asarray(savic.average_params(state)["x"])
+    xstar = problem.x_star()
+    assert np.linalg.norm(x - xstar) < 0.3, (kind, np.linalg.norm(x - xstar))
+    assert hist[-1] < hist[0]
+
+
+def test_local_scaling_converges(problem):
+    pc = PrecondConfig(kind="adam", alpha=1e-3)
+    sv = SavicConfig(gamma=0.03, beta1=0.0, scaling="local")
+    state, hist, _ = _run(problem, pc, sv, rounds=60)
+    x = np.asarray(savic.average_params(state)["x"])
+    assert np.linalg.norm(x - problem.x_star()) < 0.4
+
+
+def test_global_d_has_no_client_dim(problem):
+    pc = PrecondConfig(kind="adam", alpha=1e-3)
+    sv = SavicConfig(gamma=0.03)
+    state = savic.init_state(jax.random.PRNGKey(0),
+                             lambda k: {"x": jnp.zeros(24)}, pc, sv, 4)
+    assert state["precond"]["d"]["x"].shape == (24,)
+    sv_local = SavicConfig(gamma=0.03, scaling="local")
+    state_l = savic.init_state(jax.random.PRNGKey(0),
+                               lambda k: {"x": jnp.zeros(24)}, pc, sv_local, 4)
+    assert state_l["precond"]["d"]["x"].shape == (4, 24)
+
+
+def test_more_local_steps_bigger_drift(problem):
+    """V_t grows with H (Lemma 2: E[V_t] ≤ (H-1)γ²σ²/α)."""
+    pc = PrecondConfig(kind="identity")
+    drifts = []
+    for H in (2, 8):
+        sv = SavicConfig(gamma=0.05, beta1=0.0)
+        _, _, met = _run(problem, pc, sv, rounds=5, H=H)
+        drifts.append(float(met["client_drift"]))
+    assert drifts[1] > drifts[0]
+
+
+# --------------------------------------------------------------------------- #
+# FedOpt baseline ([42]) — including the paper's §5.2 τ→0 critique
+# --------------------------------------------------------------------------- #
+
+
+def _fed_run(problem, cfg, rounds=30, K=5, seed=0):
+    loss = _quad_loss(problem)
+    step = jax.jit(fedopt.build_round_step(loss, cfg))
+    state = fedopt.init_state(jax.random.PRNGKey(seed),
+                              lambda k: {"x": jnp.zeros(problem.b.shape[1])},
+                              cfg)
+    loader = QuadraticLoader(problem, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    mets = []
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        batch = jax.tree.map(jnp.asarray, loader.round_batch(K))
+        state, met = step(state, batch, k)
+        mets.append({k2: float(v) for k2, v in met.items()})
+    return state, mets
+
+
+@pytest.mark.parametrize("server_opt", ["adagrad", "adam", "yogi"])
+def test_fedopt_converges(problem, server_opt):
+    cfg = fedopt.FedOptConfig(server_opt=server_opt, eta=0.1, eta_l=0.02,
+                              tau=1e-2)
+    state, mets = _fed_run(problem, cfg, rounds=40)
+    assert mets[-1]["loss"] < mets[0]["loss"]
+
+
+def test_fedopt_tau_zero_paper_5_2(problem):
+    """Paper §5.2 critique, both directions.
+
+    With v_{-1} = 1 (the setting of the paper's chain of conclusions 1-6) and
+    η_l ~ τ, the server step is m_t/(√v_t+τ) ~ τ → the iterates freeze as
+    τ→0. With v_{-1} = τ² (the paper's proposed resolution), Δ/(√v+τ) ~ const
+    and the step size stays O(1).
+    """
+    # stall: v_{-1} = 1
+    stall = []
+    for tau in (1e-1, 1e-5):
+        cfg = fedopt.FedOptConfig(server_opt="adagrad", eta=0.05,
+                                  eta_l=0.5 * tau, tau=tau, beta1=0.0,
+                                  v_init=1.0)
+        _, mets = _fed_run(problem, cfg, rounds=5)
+        stall.append(np.mean([m["step_norm"] for m in mets]))
+    assert stall[1] < stall[0] * 1e-2, stall
+
+    # resolved: v_{-1} = τ² (the default)
+    ok = []
+    for tau in (1e-1, 1e-5):
+        cfg = fedopt.FedOptConfig(server_opt="adagrad", eta=0.05,
+                                  eta_l=0.5 * tau, tau=tau, beta1=0.0)
+        _, mets = _fed_run(problem, cfg, rounds=5)
+        ok.append(np.mean([m["step_norm"] for m in mets]))
+    assert 0.2 < ok[1] / ok[0] < 5.0, ok
+
+
+def test_sync_dtype_bf16_still_converges(problem):
+    """Beyond-paper sync compression: bf16 quantized averaging still
+    converges to a comparable neighborhood (precision note in §Perf C2)."""
+    pc = PrecondConfig(kind="adam", alpha=1e-3)
+    sv = SavicConfig(gamma=0.03, beta1=0.0, sync_dtype="bfloat16")
+    state, hist, _ = _run(problem, pc, sv, rounds=60)
+    x = np.asarray(savic.average_params(state)["x"])
+    assert np.linalg.norm(x - problem.x_star()) < 0.5
+
+
+def test_partial_participation(problem):
+    """FedAvg-style client sampling: converges with participation<1 and the
+    full-participation path is numerically unchanged."""
+    pc = PrecondConfig(kind="adam", alpha=1e-3)
+    sv_half = SavicConfig(gamma=0.03, beta1=0.0, participation=0.5)
+    state, hist, _ = _run(problem, pc, sv_half, rounds=60)
+    x = np.asarray(savic.average_params(state)["x"])
+    assert np.linalg.norm(x - problem.x_star()) < 0.5
+
+    # participation=1.0 must equal plain mean exactly
+    sv_full = SavicConfig(gamma=0.03, beta1=0.0, participation=1.0)
+    s1, _, _ = _run(problem, pc, sv_full, rounds=3)
+    sv_ref = SavicConfig(gamma=0.03, beta1=0.0)
+    s2, _, _ = _run(problem, pc, sv_ref, rounds=3)
+    np.testing.assert_allclose(np.asarray(s1["params"]["x"]),
+                               np.asarray(s2["params"]["x"]), rtol=1e-6)

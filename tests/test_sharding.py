@@ -1,0 +1,90 @@
+"""Sharding: partition-spec rules + sharded-vs-single-device numerical
+equivalence (subprocess: needs its own XLA device count)."""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import ModelCallConfig, build
+from repro.sharding import AxisPlan, params_pspecs, plan_for
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class _FakeMesh:
+    """Just enough of a Mesh for the partitioner's divisibility checks."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-236b",
+                                  "mamba2-1.3b", "qwen2-moe-a2.7b"])
+def test_param_specs_divisible(arch):
+    """Every sharded dim must divide by its mesh-axes extent (the rule the
+    partitioner promises)."""
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    plan = plan_for("paper", False)
+    cfg = get_config(arch)
+    model = build(cfg, ModelCallConfig())
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = params_pspecs(cfg, pshape, mesh, plan, client_dim=False)
+
+    def check(leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (leaf.shape, spec)
+
+    jax.tree.map(check, pshape, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+    # something must actually be model-sharded
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert any("model" in str(s) for s in flat)
+
+
+def test_expert_dim_sharded_when_divisible():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    plan = plan_for("paper", False)
+    cfg = get_config("deepseek-v2-236b")      # 160 experts % 16 == 0
+    model = build(cfg, ModelCallConfig())
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = params_pspecs(cfg, pshape, mesh, plan, client_dim=False)
+    s = specs["blocks"]["stack"]["ffn"]["experts"]["wg"]
+    assert tuple(s)[1] in ("model", ("model",))   # (L,E,d,f): E expert-parallel
+
+
+def test_client_dim_added():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    plan = plan_for("paper", False)
+    cfg = get_config("qwen2-0.5b")
+    model = build(cfg, ModelCallConfig())
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    import jax.numpy as jnp
+    pm = jax.tree.map(lambda s: jax.ShapeDtypeStruct((16,) + s.shape, s.dtype),
+                      pshape)
+    specs = params_pspecs(cfg, pm, mesh, plan, client_dim=True)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(tuple(s)[0] in ("data", ("data",)) for s in flat)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-1.3b",
+                                  "qwen2-moe-a2.7b"])
+def test_sharded_equals_single_device(arch):
+    """8-device (2,4) mesh run == single-device run (subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "_sharding_worker.py"),
+         arch],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
