@@ -12,6 +12,9 @@ under results/bench/.
               vs the analytic bound.
   sec52       §5.2 critique table: FedAdaGrad step size as τ→0 with
               v_{-1}=1 (stalls) vs v_{-1}=τ² (does not).
+  engine      wall-time per round for every round-engine method (savic,
+              fedavg, fedadagrad, fedadam, fedyogi, local-adam) on the
+              reduced config; also writes BENCH_engine.json at the repo root.
   comm        communication volume per round: SAVIC sync vs per-step DDP
               (analytic, from param counts) + measured collective bytes from
               dry-run artifacts when present.
@@ -71,7 +74,7 @@ def _mlp(n_in, n_classes, width=128):
 
 
 def bench_fig1(rounds=25, H=6, fracs=(0.3, 0.5, 0.7), seed=0):
-    from repro.core import PrecondConfig, SavicConfig, savic
+    from repro.core import PrecondConfig, SavicConfig, engine, savic
     from repro.data import (ClassificationData, FederatedLoader,
                             main_class_partition)
 
@@ -91,10 +94,13 @@ def bench_fig1(rounds=25, H=6, fracs=(0.3, 0.5, 0.7), seed=0):
         parts = main_class_partition(data.y[:-ntest], 10, frac, seed=seed)
         for mname, (kind, scaling) in methods.items():
             init, loss, acc = _mlp(data.x.shape[1], 10)
-            pc = PrecondConfig(kind=kind, alpha=1e-8)
-            sv = SavicConfig(gamma=0.02, beta1=0.9, scaling=scaling)
-            step = jax.jit(savic.build_round_step(loss, pc, sv))
-            state = savic.init_state(jax.random.PRNGKey(seed), init, pc, sv, 10)
+            # α floor active (corrected Adam debias: D̂ tracks |g| from the
+            # first sync), shared γ across methods — the Fig.1 comparison
+            pc = PrecondConfig(kind=kind, alpha=1e-2)
+            sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling)
+            spec = savic.engine_spec(pc, sv)
+            step = jax.jit(engine.build_round_step(loss, spec))
+            state = engine.init_state(jax.random.PRNGKey(seed), init, spec, 10)
             loader = FederatedLoader(data.x[:-ntest],
                                      data.y[:-ntest].astype(np.int32),
                                      parts, batch_size=64, seed=seed)
@@ -103,7 +109,7 @@ def bench_fig1(rounds=25, H=6, fracs=(0.3, 0.5, 0.7), seed=0):
                 key, k = jax.random.split(key)
                 batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
                 state, met = step(state, batch, k)
-                avg = savic.average_params(state)
+                avg = engine.average_params(state)
                 rows.append({"main_frac": frac, "method": mname, "round": r,
                              "loss": float(met["loss"]),
                              "test_acc": acc(avg, xte, yte)})
@@ -218,7 +224,7 @@ def bench_thm2():
 
 
 def bench_sec52():
-    from repro.core import fedopt
+    from repro.core import engine
     from repro.data import QuadraticLoader, QuadraticProblem
     prob = QuadraticProblem.make(d=24, M=4, mu=0.5, L=4.0, sigma=0.3, seed=0)
     Q = jnp.asarray(prob.Q, jnp.float32)
@@ -231,12 +237,11 @@ def bench_sec52():
     rows, out = [], []
     for v_init_mode, v_init in (("one", 1.0), ("tau2", None)):
         for tau in (1e-1, 1e-3, 1e-5):
-            cfg = fedopt.FedOptConfig(server_opt="adagrad", eta=0.05,
-                                      eta_l=0.5 * tau, tau=tau, beta1=0.0,
-                                      v_init=v_init)
-            step = jax.jit(fedopt.build_round_step(loss, cfg))
-            state = fedopt.init_state(jax.random.PRNGKey(0),
-                                      lambda k: {"x": jnp.zeros(24)}, cfg)
+            spec = engine.method_spec("fedadagrad", eta=0.05, eta_l=0.5 * tau,
+                                      tau=tau, server_beta1=0.0, v_init=v_init)
+            step = jax.jit(engine.build_round_step(loss, spec))
+            state = engine.init_state(jax.random.PRNGKey(0),
+                                      lambda k: {"x": jnp.zeros(24)}, spec, 4)
             loader = QuadraticLoader(prob, seed=0)
             key = jax.random.PRNGKey(1)
             sn = []
@@ -256,6 +261,71 @@ def bench_sec52():
                 round(fixed[0]["mean_step_norm"]
                       / max(fixed[-1]["mean_step_norm"], 1e-12), 2)))
     return out, _emit(rows, "sec52")
+
+
+# --------------------------------------------------------------------------- #
+# engine — wall-time per round per method (reduced config) -> BENCH_engine.json
+# --------------------------------------------------------------------------- #
+
+
+ENGINE_BENCH_METHODS = ("savic", "fedavg", "fedadagrad", "fedadam", "fedyogi",
+                        "local-adam")
+
+
+def bench_engine(rounds=12, H=4, M=8, seed=0):
+    """Per-round wall time for every engine method on the reduced fig1-style
+    config (MLP on heterogeneous classification). Emits the usual CSV plus a
+    machine-readable BENCH_engine.json at the repo root to seed the perf
+    trajectory across PRs."""
+    from repro.core import engine
+    from repro.data import (ClassificationData, FederatedLoader,
+                            main_class_partition)
+
+    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
+    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
+    rows, out = [], []
+    methods_json = {}
+    # adaptive-server step is ~η per coordinate: the Adam/Yogi server needs a
+    # smaller η when clients are scaled too (local-adam)
+    overrides = {"local-adam": dict(eta_l=0.005, eta=0.02)}
+    for method in ENGINE_BENCH_METHODS:
+        init, loss, _ = _mlp(data.x.shape[1], 10)
+        kw = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
+        kw.update(overrides.get(method, {}))
+        spec = engine.method_spec(method, **kw)
+        step = jax.jit(engine.build_round_step(loss, spec))
+        state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
+        loader = FederatedLoader(data.x, data.y.astype(np.int32), parts[:M],
+                                 batch_size=32, seed=seed)
+        key = jax.random.PRNGKey(seed + 1)
+        times = []
+        for r in range(rounds):
+            key, k = jax.random.split(key)
+            batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
+            t0 = time.perf_counter()
+            state, met = step(state, batch, k)
+            jax.block_until_ready(state)
+            times.append((time.perf_counter() - t0) * 1e3)
+        rec = {
+            "round_ms_first": round(times[0], 3),        # includes compile
+            "round_ms_mean": round(float(np.mean(times[1:])), 3),
+            "round_ms_p50": round(float(np.median(times[1:])), 3),
+            "rounds": rounds,
+            "final_loss": round(float(met["loss"]), 4),
+        }
+        methods_json[method] = rec
+        rows.append({"method": method, **rec})
+        out.append(("engine", f"round_ms_{method.replace('-', '_')}",
+                    rec["round_ms_mean"]))
+    path_json = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_engine.json")
+    with open(path_json, "w") as f:
+        json.dump({"bench": "engine_round_walltime",
+                   "config": {"model": "mlp_cls_reduced", "clients": M,
+                              "h_local": H, "rounds": rounds,
+                              "backend": jax.default_backend()},
+                   "methods": methods_json}, f, indent=1)
+    return out, _emit(rows, "engine")
 
 
 # --------------------------------------------------------------------------- #
@@ -347,6 +417,7 @@ BENCHES = {
     "thm1": bench_thm1,
     "thm2": bench_thm2,
     "sec52": bench_sec52,
+    "engine": bench_engine,
     "comm": bench_comm,
     "kernels": bench_kernels,
 }

@@ -64,8 +64,8 @@ METHODS = {"SGD": ("identity", "global"),
 
 rows = []
 for name, (kind, scaling) in METHODS.items():
-    pc = PrecondConfig(kind=kind, alpha=1e-8, beta2=0.999)
-    sv = SavicConfig(gamma=0.02, beta1=0.9, scaling=scaling)
+    pc = PrecondConfig(kind=kind, alpha=1e-2, beta2=0.999)
+    sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling)
     step = jax.jit(savic.build_round_step(loss, pc, sv))
     state = savic.init_state(jax.random.PRNGKey(0), init, pc, sv, 10)
     loader = FederatedLoader(data.x[:-1000], data.y[:-1000].astype(np.int32),

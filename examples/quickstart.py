@@ -26,8 +26,8 @@ def loss_fn(params, micro):
 
 
 # 2. SAVIC: Adam-style preconditioner, global scaling (Algorithm 1)
-pc = PrecondConfig(kind="adam", alpha=1e-6)
-sv = SavicConfig(gamma=0.05, beta1=0.9, scaling="global")
+pc = PrecondConfig(kind="adam", alpha=1e-2)
+sv = SavicConfig(gamma=0.005, beta1=0.9, scaling="global")
 round_step = jax.jit(savic.build_round_step(loss_fn, pc, sv))
 state = savic.init_state(jax.random.PRNGKey(0),
                          lambda k: {"x": jnp.zeros(32)}, pc, sv, n_clients=8)

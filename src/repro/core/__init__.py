@@ -2,10 +2,13 @@
 
 Public API:
     PrecondConfig, SavicConfig     — configuration
-    savic.init_state / build_round_step — Algorithm 1
-    fedopt.*                       — the FedOpt baseline of [42]
+    engine.*                       — the pluggable round engine
+                                     (ClientLoop × SyncStrategy × ServerUpdate)
+    savic.init_state / build_round_step — Algorithm 1 (engine preset)
+    fedopt.*                       — the FedOpt baseline of [42] (engine preset)
     theory.*                       — Theorem 1/2 predictors
 """
 from repro.core.preconditioner import PrecondConfig  # noqa
+from repro.core.engine import EngineSpec  # noqa
 from repro.core.savic import SavicConfig, build_round_step, init_state  # noqa
-from repro.core import fedopt, theory, schedules  # noqa
+from repro.core import engine, fedopt, theory, schedules  # noqa

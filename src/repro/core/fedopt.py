@@ -14,6 +14,13 @@ adaptive update:
 This module exists so the paper's §5.2 critique is testable: the benchmark
 harness sweeps τ→0 and shows the iterate stalls (x_{t+1} ≈ x_t) when
 v_{-1} = τ², as the paper argues.
+
+Since the round-engine refactor this is a thin method definition over
+``core/engine.py``: FedOpt = plain-SGD ClientLoop (momentum reset each round)
+× SyncStrategy × adaptive ServerUpdate. The public API keeps the original
+single-replica state layout ``{"params", "m", "v", "round"}``; the adapter
+broadcasts to the engine's (M, ...) client layout at round time and projects
+back (clients are identical at round boundaries, so the projection is exact).
 """
 from __future__ import annotations
 
@@ -22,6 +29,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import engine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +43,17 @@ class FedOptConfig:
     tau: float = 1e-3              # adaptivity floor τ
     v_init: float = None           # v_{-1}; default τ² (the paper's pain point)
     client_momentum: float = 0.0
+
+
+def engine_spec(cfg: FedOptConfig) -> engine.EngineSpec:
+    """FedOptConfig -> the engine's three-layer spec."""
+    spec = engine.method_spec(
+        "fed" + cfg.server_opt, eta=cfg.eta, eta_l=cfg.eta_l, tau=cfg.tau,
+        server_beta1=cfg.beta1, server_beta2=cfg.beta2, v_init=cfg.v_init)
+    if cfg.client_momentum:
+        spec = dataclasses.replace(spec, client=dataclasses.replace(
+            spec.client, momentum=cfg.client_momentum))
+    return spec
 
 
 def init_state(key, init_params_fn, cfg: FedOptConfig):
@@ -49,51 +69,28 @@ def init_state(key, init_params_fn, cfg: FedOptConfig):
 
 def build_round_step(loss_fn: Callable, cfg: FedOptConfig):
     """Returns round_step(state, batch, key); batch leaves (M, K, ...)."""
-    grad_fn = jax.value_and_grad(loss_fn)
-
-    def client_run(params0, micro_k):
-        """K local SGD steps for one client; micro_k leaves (K, ...)."""
-
-        def step(carry, micro):
-            p, mom = carry
-            loss, g = grad_fn(p, micro)
-            mom = jax.tree.map(lambda m, gi: cfg.client_momentum * m + gi,
-                               mom, g)
-            p = jax.tree.map(lambda pi, mi: pi - cfg.eta_l * mi, p, mom)
-            return (p, mom), loss
-
-        mom0 = jax.tree.map(jnp.zeros_like, params0)
-        (p, _), losses = jax.lax.scan(step, (params0, mom0), micro_k)
-        delta = jax.tree.map(lambda a, b: a - b, p, params0)
-        return delta, losses
+    spec = engine_spec(cfg)
+    eng_step = engine.build_round_step(loss_fn, spec)
 
     def round_step(state, batch, key):
-        del key
-        deltas, losses = jax.vmap(lambda mk: client_run(state["params"], mk))(
-            batch)                                   # (M, ...) pytree
-        delta = jax.tree.map(lambda d: d.mean(axis=0), deltas)
-
-        m = jax.tree.map(lambda m_, d: cfg.beta1 * m_ + (1 - cfg.beta1) * d,
-                         state["m"], delta)
-        if cfg.server_opt == "adagrad":
-            v = jax.tree.map(lambda v_, d: v_ + d * d, state["v"], delta)
-        elif cfg.server_opt == "adam":
-            v = jax.tree.map(
-                lambda v_, d: cfg.beta2 * v_ + (1 - cfg.beta2) * d * d,
-                state["v"], delta)
-        elif cfg.server_opt == "yogi":
-            v = jax.tree.map(
-                lambda v_, d: v_ - (1 - cfg.beta2) * d * d
-                * jnp.sign(v_ - d * d), state["v"], delta)
-        else:
-            raise ValueError(cfg.server_opt)
-        params = jax.tree.map(
-            lambda x, m_, v_: x + cfg.eta * m_ / (jnp.sqrt(v_) + cfg.tau),
-            state["params"], m, v)
-        new_state = {"params": params, "m": m, "v": v,
-                     "round": state["round"] + 1}
-        step_norm = jnp.sqrt(sum(jnp.vdot(a - b, a - b).real for a, b in zip(
-            jax.tree.leaves(params), jax.tree.leaves(state["params"]))))
-        return new_state, {"loss": losses.mean(), "step_norm": step_norm}
+        M = jax.tree.leaves(batch)[0].shape[0]
+        params_m = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (M,) + p.shape),
+            state["params"])
+        eng_state = {
+            "params": params_m,
+            "mom": jax.tree.map(jnp.zeros_like, params_m),
+            "precond": {"t": state["round"]},
+            "server": {"m": state["m"], "v": state["v"]},
+            "round": state["round"],
+        }
+        eng_state, met = eng_step(eng_state, batch, key)
+        new_state = {
+            "params": engine.average_params(eng_state),
+            "m": eng_state["server"]["m"],
+            "v": eng_state["server"]["v"],
+            "round": eng_state["round"],
+        }
+        return new_state, {"loss": met["loss"], "step_norm": met["step_norm"]}
 
     return round_step

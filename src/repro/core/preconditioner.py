@@ -76,8 +76,8 @@ def beta_t(cfg: PrecondConfig, t):
         return None  # accumulate
     if cfg.schedule == "const":
         return jnp.float32(b)
-    tt = t.astype(jnp.float32) + 1.0
-    return (b - b ** (tt + 1.0)) / (1.0 - b ** (tt + 1.0))
+    tt = t.astype(jnp.float32) + 1.0   # 1-based update index
+    return (b - b ** tt) / (1.0 - b ** tt)
 
 
 def grad_stat(grads):

@@ -7,24 +7,18 @@ is identical on every client (*global scaling*, the analyzed setting); the
 experimental *local scaling* variant (per-client D updated every local step)
 is also implemented.
 
-Distribution contract (see sharding/partitioner.py): every state leaf carries
-a leading client dim M sharded over the plan's client axes — except the global
-D, which is client-replicated (no M dim), matching the algorithm. Local steps
-are ``vmap`` over M inside a ``lax.scan`` over H: XLA provably emits no
-cross-client collective inside the scan; the sync ``mean`` over M is the only
-cross-client traffic per round. That is the paper's communication saving,
-realized on the mesh.
+Since the round-engine refactor this module is a thin method definition over
+``core/engine.py``: SAVIC = locally-scaled heavy-ball ClientLoop × weighted /
+quantized SyncStrategy × identity-averaging ServerUpdate. The engine emits the
+exact program the pre-refactor monolith did (regression-pinned in
+tests/test_engine.py); the state pytree and public API are unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import preconditioner as PC
+from repro.core import engine
 from repro.core.preconditioner import PrecondConfig
 
 
@@ -50,52 +44,26 @@ class SavicConfig:
     participation: float = 1.0
 
 
+def engine_spec(pc_cfg: PrecondConfig, sv_cfg: SavicConfig) -> engine.EngineSpec:
+    """SavicConfig × PrecondConfig -> the engine's three-layer spec."""
+    return engine.EngineSpec(
+        client=engine.ClientLoopSpec(
+            lr=sv_cfg.gamma, momentum=sv_cfg.beta1, scaling=sv_cfg.scaling,
+            stat_source=sv_cfg.stat_source, weight_decay=sv_cfg.weight_decay,
+            grad_clip=sv_cfg.grad_clip,
+            use_fused_kernel=sv_cfg.use_fused_kernel),
+        sync=engine.SyncSpec(
+            participation=sv_cfg.participation, sync_dtype=sv_cfg.sync_dtype,
+            average_momentum=sv_cfg.average_momentum),
+        server=engine.ServerSpec(kind="average"),
+        precond=pc_cfg)
+
+
 def init_state(key, init_params_fn, pc_cfg: PrecondConfig, sv_cfg: SavicConfig,
                n_clients: int):
     """Build the SAVIC train state. x_0^m = x_0 (identical start, Algorithm 1)."""
-    params = init_params_fn(key)
-    params_m = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None], (n_clients,) + p.shape), params)
-    mom = jax.tree.map(jnp.zeros_like, params_m)
-    if sv_cfg.scaling == "local":
-        pstate = PC.init_state(pc_cfg, params_m)      # per-client D (leading M)
-        if "d" in pstate:
-            pstate["t"] = jnp.zeros((n_clients,), jnp.int32)  # per-client t
-    else:
-        pstate = PC.init_state(pc_cfg, params)        # global D (no M)
-    return {
-        "params": params_m,
-        "mom": mom,
-        "precond": pstate,
-        "round": jnp.int32(0),
-    }
-
-
-def _clip(grads, max_norm):
-    if not max_norm:
-        return grads
-    nrm = jnp.sqrt(sum(jnp.vdot(g, g).real
-                       for g in jax.tree.leaves(grads)) + 1e-12)
-    scale = jnp.minimum(1.0, max_norm / nrm)
-    return jax.tree.map(lambda g: g * scale, grads)
-
-
-def _apply_update(params, mom, grads, pstate, pc_cfg, sv_cfg):
-    """x ← x − γ D̂^{-1} m,  m ← β₁ m + g   (heavy-ball, scaled)."""
-    g = grads
-    if sv_cfg.weight_decay:
-        g = jax.tree.map(lambda gi, p: gi + sv_cfg.weight_decay * p, g, params)
-    mom = jax.tree.map(lambda m, gi: sv_cfg.beta1 * m + gi, mom, g)
-    if sv_cfg.use_fused_kernel and pc_cfg.kind != "identity":
-        from repro.kernels import ops as kops
-        params = kops.scaled_update_tree(params, mom, pstate["d"],
-                                         sv_cfg.gamma, pc_cfg.alpha,
-                                         squared=pc_cfg.rule == "squared")
-    else:
-        direction = PC.precondition(pc_cfg, pstate, mom)
-        params = jax.tree.map(lambda p, d: p - sv_cfg.gamma * d,
-                              params, direction)
-    return params, mom
+    return engine.init_state(key, init_params_fn, engine_spec(pc_cfg, sv_cfg),
+                             n_clients)
 
 
 def build_round_step(loss_fn: Callable, pc_cfg: PrecondConfig,
@@ -105,139 +73,13 @@ def build_round_step(loss_fn: Callable, pc_cfg: PrecondConfig,
     Returns ``round_step(state, batch, key)`` where each batch leaf is
     (M, H, ...): H microbatches per client per round. Returns (state, metrics).
     """
-    grad_fn = jax.value_and_grad(loss_fn)
-
-    def local_step_one_client(params, mom, pstate, micro, key):
-        """One SGD-with-scaling step on one client. pstate: client's view."""
-        loss, grads = grad_fn(params, micro)
-        grads = _clip(grads, sv_cfg.grad_clip)
-        if sv_cfg.scaling == "local" and pc_cfg.kind != "identity":
-            stat = (PC.hutchinson_diag(loss_fn, params, micro, key)
-                    if pc_cfg.uses_hutchinson else PC.grad_stat(grads))
-            if pc_cfg.rule == "linear" and not pc_cfg.uses_hutchinson:
-                stat = jax.tree.map(jnp.abs, grads)
-            pstate = PC.update(pc_cfg, pstate, stat)
-        params, mom = _apply_update(params, mom, grads, pstate, pc_cfg, sv_cfg)
-        return params, mom, pstate, loss, grads
-
-    def round_step(state, batch, key):
-        M = jax.tree.leaves(state["params"])[0].shape[0]
-        H = jax.tree.leaves(batch)[0].shape[1]
-        local_global_d = sv_cfg.scaling == "global"
-        n_part = max(1, int(round(sv_cfg.participation * M)))
-
-        def scan_body(carry, xs):
-            params_m, mom_m, pstate, _ = carry
-            micro_m, keys = xs  # (M, ...) microbatch slice, (M,) keys
-
-            if local_global_d:
-                fn = lambda p, m, mc, k: local_step_one_client(
-                    p, m, pstate, mc, k)
-                params_m, mom_m, _, losses, grads = jax.vmap(fn)(
-                    params_m, mom_m, micro_m, keys)
-                new_pstate = pstate
-            else:
-                fn = local_step_one_client
-                params_m, mom_m, new_pstate, losses, grads = jax.vmap(fn)(
-                    params_m, mom_m, pstate, micro_m, keys)
-            return (params_m, mom_m, new_pstate, grads), losses
-
-        keys = jax.random.split(key, (H, M))
-        micro = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # (H,M,...)
-        grads0 = jax.tree.map(jnp.zeros_like, state["params"])
-        (params_m, mom_m, pstate, last_grads), losses = jax.lax.scan(
-            scan_body,
-            (state["params"], state["mom"], state["precond"], grads0),
-            (micro, keys))
-
-        drift_pre_sync = _drift(params_m)
-        # ---- partial participation: sample n_part clients for the average ---
-        if n_part < M:
-            perm = jax.random.permutation(jax.random.fold_in(key, 3), M)
-            w_part = jnp.zeros((M,)).at[perm[:n_part]].set(1.0 / n_part)
-        else:
-            w_part = jnp.full((M,), 1.0 / M)
-        # ---- synchronization: average the post-step client variables --------
-        def _wmean(p):
-            wb = w_part.reshape((M,) + (1,) * (p.ndim - 1)).astype(p.dtype)
-            return (p * wb).sum(axis=0)
-
-        if sv_cfg.sync_dtype:
-            sd = jnp.dtype(sv_cfg.sync_dtype)
-
-            def avg(p):
-                # the barrier pins the low-precision representation so BOTH
-                # legs of the sync (reduce + broadcast-back) move sync_dtype
-                # bytes; the f32 cast happens locally after (quantized
-                # averaging — same family as the quantization line of related
-                # work [19,20]; sync noise ~2^-8 relative)
-                q = jax.lax.optimization_barrier(p.astype(sd))
-                a = _wmean(q)
-                return jax.lax.optimization_barrier(a)
-        else:
-            avg = _wmean
-        params_avg = jax.tree.map(avg, params_m)
-        # broadcast back in sync_dtype; cast to master dtype locally
-        params_m = jax.tree.map(
-            lambda p, a: jnp.broadcast_to(a[None], (p.shape[0],) + a.shape
-                                          ).astype(p.dtype),
-            params_m, params_avg)
-        params_avg = jax.tree.map(
-            lambda x: x[0], params_m)
-        if sv_cfg.average_momentum:
-            mom_m = jax.tree.map(
-                lambda m: jnp.broadcast_to(avg(m)[None],
-                                           m.shape).astype(m.dtype), mom_m)
-
-        # ---- D update at sync (global scaling; Algorithm 1 line 4) ----------
-        if local_global_d and pc_cfg.kind != "identity":
-            g_last = last_grads  # (M, ...) — grads of the sync step
-            if sv_cfg.stat_source == "avg_grad":
-                g_avg = jax.tree.map(avg, g_last)  # participation+dtype apply
-                if pc_cfg.uses_hutchinson:
-                    sync_micro = jax.tree.map(lambda x: x[-1, 0], micro)
-                    stat = PC.hutchinson_diag(loss_fn, params_avg, sync_micro,
-                                              jax.random.fold_in(key, 7))
-                elif pc_cfg.rule == "linear":
-                    stat = jax.tree.map(jnp.abs, g_avg)
-                else:
-                    stat = PC.grad_stat(g_avg)
-            else:  # avg_local
-                if pc_cfg.uses_hutchinson:
-                    sync_micro = jax.tree.map(lambda x: x[-1], micro)  # (M,...)
-                    hk = jax.random.split(jax.random.fold_in(key, 7), M)
-                    stats = jax.vmap(lambda p, mc, k: PC.hutchinson_diag(
-                        loss_fn, p, mc, k))(params_m, sync_micro, hk)
-                elif pc_cfg.rule == "linear":
-                    stats = jax.tree.map(jnp.abs, g_last)
-                else:
-                    stats = PC.grad_stat(g_last)
-                stat = jax.tree.map(lambda s: s.mean(axis=0), stats)
-            pstate = PC.update(pc_cfg, pstate, stat)
-
-        new_state = {
-            "params": params_m,
-            "mom": mom_m,
-            "precond": pstate,
-            "round": state["round"] + 1,
-        }
-        metrics = {
-            "loss": losses.mean(),
-            "loss_per_client": losses[-1],
-            "client_drift": drift_pre_sync,
-        }
-        return new_state, metrics
-
-    return round_step
+    return engine.build_round_step(loss_fn, engine_spec(pc_cfg, sv_cfg))
 
 
 def _drift(params_m):
     """(1/M)Σ‖x^m − x̂‖² — the V_t of the analysis (0 right after sync)."""
-    def per_leaf(p):
-        mean = p.mean(axis=0, keepdims=True)
-        return jnp.sum((p - mean) ** 2)
-    return sum(jax.tree.leaves(jax.tree.map(per_leaf, params_m)))
+    return engine.client_drift(params_m)
 
 
 def average_params(state):
-    return jax.tree.map(lambda p: p[0], state["params"])
+    return engine.average_params(state)

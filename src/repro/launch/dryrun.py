@@ -34,7 +34,8 @@ from repro.utils.hlo_cost import analyze as hlo_analyze
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            mode: str = "auto", out_dir: str = "results/dryrun",
+            mode: str = "auto", method: str = "savic",
+            out_dir: str = "results/dryrun",
             save: bool = True, call=None, tag: str = "", verbose=True):
     mesh = make_production_mesh(multi_pod=multi_pod)
     shape = get_shape(shape_name)
@@ -44,7 +45,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "n_devices": mesh.devices.size, "tag": tag,
     }
     t0 = time.time()
-    built = build_step(arch, shape_name, mesh, mode=mode, call=call) \
+    built = build_step(arch, shape_name, mesh, mode=mode, method=method,
+                       call=call) \
         if shape.kind == "train" else build_step(arch, shape_name, mesh,
                                                  call=call)
     with mesh:
@@ -58,6 +60,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older jaxlib: one dict per executable
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll_total, coll_kind, coll_count = collective_bytes(hlo)
     tc = hlo_analyze(hlo)   # trip-count-corrected (scans execute L·H times)
@@ -66,6 +70,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec.update({
         "kind": shape.kind,
         "mode": built.meta.get("mode", "serve"),
+        "method": built.meta.get("method", ""),
         "clients": built.meta.get("clients", 0),
         "h_local": built.meta.get("h_local", 0),
         "lower_s": round(t1 - t0, 2),
@@ -115,6 +120,9 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--mode", default="auto")
+    ap.add_argument("--method", default="savic",
+                    help="round-engine method for train shapes "
+                         "(savic|fedadagrad|fedadam|fedyogi|local-adam)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -124,7 +132,7 @@ def main():
         for arch, shape in pairs_to_run():
             try:
                 run_one(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
-                        out_dir=args.out, tag=args.tag)
+                        method=args.method, out_dir=args.out, tag=args.tag)
             except Exception as e:  # noqa
                 failures.append((arch, shape, repr(e)))
                 print(f"[dryrun] FAIL {arch} {shape}: {e}", flush=True)
@@ -135,7 +143,7 @@ def main():
         raise SystemExit(1 if failures else 0)
 
     run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
-            out_dir=args.out, tag=args.tag)
+            method=args.method, out_dir=args.out, tag=args.tag)
 
 
 if __name__ == "__main__":

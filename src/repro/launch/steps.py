@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ModelConfig, ShapeConfig, get_config, get_shape
-from repro.core import PrecondConfig, SavicConfig, savic
+from repro.core import PrecondConfig, SavicConfig, engine, savic
 from repro.models import ModelCallConfig, batch_struct, build
 from repro.sharding import (AxisPlan, batch_pspecs, cache_pspecs,
                             params_pspecs, plan_for, serve_batch_pspecs)
@@ -52,10 +52,24 @@ def savic_round_h(shape: ShapeConfig) -> int:
     return 8  # local steps per round lowered in the dry-run (scan: HLO-size free)
 
 
+def _method_engine_spec(method: str, pc_kind: str,
+                        sv: Optional[SavicConfig]) -> engine.EngineSpec:
+    """Resolve the engine spec for a train-step method selector."""
+    if method == "savic":
+        pc = PrecondConfig(kind=pc_kind, alpha=1e-2)
+        return savic.engine_spec(pc, sv or SavicConfig(gamma=3e-4, beta1=0.9))
+    if sv is not None:
+        raise ValueError(f"sv= (SavicConfig) only applies to method='savic', "
+                         f"got method={method!r}")
+    return engine.method_spec(method, pc_kind=pc_kind)
+
+
 def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
-                     pc_kind: str = "adam", call: Optional[ModelCallConfig] = None,
+                     method: str = "savic", pc_kind: str = "adam",
+                     call: Optional[ModelCallConfig] = None,
                      reduced: bool = False, h_local: Optional[int] = None,
-                     sv: Optional[SavicConfig] = None):
+                     sv: Optional[SavicConfig] = None,
+                     engine_spec: Optional[engine.EngineSpec] = None):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
     if call is None:
@@ -76,9 +90,8 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     b_client = shape.global_batch // M
     H = h_local or savic_round_h(shape)
 
-    pc = PrecondConfig(kind=pc_kind, alpha=1e-8)
-    sv = sv or SavicConfig(gamma=3e-4, beta1=0.9)
-    round_step = savic.build_round_step(model.loss, pc, sv)
+    spec = engine_spec or _method_engine_spec(method, pc_kind, sv)
+    round_step = engine.build_round_step(model.loss, spec)
 
     def step(state, batch):
         key = jax.random.fold_in(jax.random.PRNGKey(0), state["round"])
@@ -86,22 +99,14 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
 
     # ---- abstract state & batch ----------------------------------------------
     state_shape = jax.eval_shape(
-        partial(savic.init_state, init_params_fn=model.init, pc_cfg=pc,
-                sv_cfg=sv, n_clients=M), jax.random.PRNGKey(0))
+        partial(engine.init_state, init_params_fn=model.init, spec=spec,
+                n_clients=M), jax.random.PRNGKey(0))
     micro = batch_struct(cfg, b_client, shape.seq_len)
     batch_shape = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((M, H) + s.shape, s.dtype), micro)
 
-    # ---- shardings ------------------------------------------------------------
-    pspec_m = params_pspecs(cfg, state_shape["params"], mesh, plan,
-                            client_dim=True)
-    state_spec = {
-        "params": pspec_m,
-        "mom": pspec_m,
-        "precond": _precond_spec(cfg, state_shape["precond"], mesh, plan,
-                                 local=False),
-        "round": P(),
-    }
+    # ---- shardings (see DESIGN.md §2) ----------------------------------------
+    state_spec = _engine_state_spec(cfg, state_shape, mesh, plan, spec)
     batch_spec = batch_pspecs(batch_shape, mesh, plan, client_dim=True)
     metrics_shape = jax.eval_shape(step, state_shape, batch_shape)[1]
     metrics_spec = jax.tree.map(lambda _: P(), metrics_shape)
@@ -115,9 +120,29 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
         in_shardings=(ns(state_spec), ns(batch_spec)),
         out_shardings=(ns(state_spec), ns(metrics_spec)),
         donate=(0,),
-        meta={"mode": mode, "clients": M, "h_local": H,
+        meta={"mode": mode, "method": method, "clients": M, "h_local": H,
               "b_client": b_client, "cfg": cfg, "plan": plan},
     )
+
+
+def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):
+    """PartitionSpec tree for an engine state pytree (DESIGN.md §2): client
+    leaves carry a leading M dim over the client axes; the global D and the
+    adaptive server's (m, v) are client-replicated single-replica trees."""
+    pspec_m = params_pspecs(cfg, state_shape["params"], mesh, plan,
+                            client_dim=True)
+    state_spec = {
+        "params": pspec_m,
+        "mom": pspec_m,
+        "precond": _precond_spec(cfg, state_shape["precond"], mesh, plan,
+                                 local=spec.client.scaling == "local"),
+        "round": P(),
+    }
+    if "server" in state_shape:
+        pspec_1 = params_pspecs(cfg, state_shape["server"]["m"], mesh, plan,
+                                client_dim=False)
+        state_spec["server"] = {"m": pspec_1, "v": pspec_1}
+    return state_spec
 
 
 def _moe_shard_fn(cfg, mesh, plan):
@@ -139,10 +164,13 @@ def _moe_shard_fn(cfg, mesh, plan):
 
 
 def _precond_spec(cfg, precond_shape, mesh, plan, local):
-    spec = {"t": P()}
+    # local scaling keeps a per-client step counter t of shape (M,)
+    t_spec = P(plan.client if plan.client else None) \
+        if precond_shape["t"].ndim else P()
+    spec = {"t": t_spec}
     if "d" in precond_shape:
         # global D: replicated across clients (no client dim), sharded like a
-        # single replica's params
+        # single replica's params; local D carries the leading client dim
         spec["d"] = params_pspecs(cfg, precond_shape["d"], mesh, plan,
                                   client_dim=local)
     return spec

@@ -1,13 +1,20 @@
-"""End-to-end SAVIC training driver.
+"""End-to-end training driver for every engine method.
 
 On real TPU hardware this runs the full assigned configs on the production
 mesh; on CPU (this container) it runs reduced configs with synthetic LM data —
-the same code path: config -> model -> SAVIC round loop -> checkpoint.
+the same code path: config -> model -> engine round loop -> checkpoint.
+
+``--method`` selects the round composition (ClientLoop × SyncStrategy ×
+ServerUpdate, see core/engine.py): savic (Algorithm 1), the FedOpt baselines
+of [42] (fedadagrad / fedadam / fedyogi), and the composed local-adam
+scenario (locally-scaled clients + adaptive server, cf. 2409.13155).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --rounds 20 --h-local 4 --clients 4 --batch 8 --seq 128 \
       --preconditioner adam --scaling global --ckpt /tmp/ck
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --method local-adam --rounds 5 --clients 2 --batch 2 --seq 64
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt_lib
 from repro.configs import get_config
-from repro.core import PrecondConfig, SavicConfig, savic
+from repro.core import PrecondConfig, SavicConfig, engine, savic
 from repro.data import LMRoundLoader, TokenStream
 from repro.models import ModelCallConfig, build
 
@@ -35,13 +42,24 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8, help="per-client batch")
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--method", default="savic", choices=list(engine.METHODS))
     ap.add_argument("--preconditioner", default="adam",
                     choices=["identity", "adam", "rmsprop", "oasis",
                              "adahessian", "adagrad"])
     ap.add_argument("--scaling", default="global", choices=["global", "local"])
-    ap.add_argument("--gamma", type=float, default=3e-3)
-    ap.add_argument("--beta1", type=float, default=0.9)
-    ap.add_argument("--alpha", type=float, default=1e-8)
+    ap.add_argument("--gamma", type=float, default=3e-3,
+                    help="client step size (γ / η_l)")
+    ap.add_argument("--beta1", type=float, default=0.9,
+                    help="client heavy-ball momentum (savic/local-adam)")
+    ap.add_argument("--alpha", type=float, default=1e-2)
+    ap.add_argument("--server-eta", type=float, default=0.1,
+                    help="adaptive-server lr η (fed*/local-adam)")
+    ap.add_argument("--server-beta1", type=float, default=0.9,
+                    help="adaptive-server momentum β₁ (fed*/local-adam)")
+    ap.add_argument("--tau", type=float, default=1e-3,
+                    help="adaptive-server floor τ (fed*/local-adam)")
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--sync-dtype", default="")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log", default="")
@@ -53,12 +71,24 @@ def main(argv=None):
     call = ModelCallConfig(dtype=getattr(jnp, args.dtype))
     model = build(cfg, call)
 
-    pc = PrecondConfig(kind=args.preconditioner, alpha=args.alpha)
-    sv = SavicConfig(gamma=args.gamma, beta1=args.beta1, scaling=args.scaling)
-    round_step = jax.jit(savic.build_round_step(model.loss, pc, sv))
+    if args.method == "savic":
+        pc = PrecondConfig(kind=args.preconditioner, alpha=args.alpha)
+        sv = SavicConfig(gamma=args.gamma, beta1=args.beta1,
+                         scaling=args.scaling,
+                         participation=args.participation,
+                         sync_dtype=args.sync_dtype)
+        spec = savic.engine_spec(pc, sv)
+    else:
+        spec = engine.method_spec(
+            args.method, pc_kind=args.preconditioner, alpha=args.alpha,
+            beta1=args.beta1, eta=args.server_eta, eta_l=args.gamma,
+            tau=args.tau, server_beta1=args.server_beta1,
+            participation=args.participation,
+            sync_dtype=args.sync_dtype)
+    round_step = jax.jit(engine.build_round_step(model.loss, spec))
 
-    state = savic.init_state(jax.random.PRNGKey(args.seed), model.init, pc, sv,
-                             args.clients)
+    state = engine.init_state(jax.random.PRNGKey(args.seed), model.init, spec,
+                              args.clients)
     start_round = 0
     if args.ckpt and ckpt_lib.latest_step(args.ckpt) is not None:
         state, start_round = ckpt_lib.restore(args.ckpt, state)
@@ -78,9 +108,14 @@ def main(argv=None):
         state, metrics = round_step(state, batch, k)
         loss = float(metrics["loss"])
         drift = float(metrics["client_drift"])
-        log.append({"round": r, "loss": loss, "drift": drift})
-        print(f"[train] round {r:4d} loss {loss:.4f} drift {drift:.3e} "
-              f"({time.time()-t0:.1f}s)", flush=True)
+        rec = {"round": r, "loss": loss, "drift": drift}
+        extra = ""
+        if "step_norm" in metrics:
+            rec["step_norm"] = float(metrics["step_norm"])
+            extra = f" step {rec['step_norm']:.3e}"
+        log.append(rec)
+        print(f"[train] round {r:4d} loss {loss:.4f} drift {drift:.3e}"
+              f"{extra} ({time.time()-t0:.1f}s)", flush=True)
         if args.ckpt and (r + 1) % args.ckpt_every == 0:
             ckpt_lib.save(args.ckpt, r + 1, state)
     if args.ckpt:

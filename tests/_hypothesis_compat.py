@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim (tier-1 robustness).
+
+``hypothesis`` is a dev-only dependency that is not guaranteed in every
+container. Importing it unconditionally used to kill collection of the whole
+suite under ``pytest -x``. Import ``given``/``settings``/``st`` from here
+instead: when hypothesis is installed they are the real thing; when it is
+missing, ``@given(...)`` turns into a per-test skip marker, so the
+deterministic tests in the same module still run.
+"""
+import pytest
+
+try:
+    import hypothesis  # noqa: F401
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _NullStrategies:
+        """st.anything(...) -> None placeholder (never executed)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda f: f

@@ -1,0 +1,103 @@
+"""Verbatim pre-refactor snapshots of core/savic.py and core/fedopt.py.
+
+Frozen at the commit that introduced core/engine.py; the engine regression
+tests in test_engine.py pin the refactored round to these trajectories.
+Not a test module (underscore prefix) - imported by tests only.
+"""
+"""FedOpt baseline — Algorithm 2 of Reddi et al. [42] (the paper §5.2 compares
+against it): FedAdaGrad / FedAdam / FedYogi.
+
+Clients run K plain local SGD steps from the server point x_t; the server
+treats Δ_t = mean_m (x_{m,K} - x_t) as a pseudo-gradient and applies an
+adaptive update:
+
+    m_t = β₁ m_{t-1} + (1-β₁) Δ_t
+    v_t = v_{t-1} + Δ_t²                     (FedAdaGrad)
+    v_t = β₂ v_{t-1} + (1-β₂) Δ_t²           (FedAdam)
+    v_t = v_{t-1} - (1-β₂) Δ_t² sign(v_{t-1}-Δ_t²)   (FedYogi)
+    x_{t+1} = x_t + η m_t / (√v_t + τ)
+
+This module exists so the paper's §5.2 critique is testable: the benchmark
+harness sweeps τ→0 and shows the iterate stalls (x_{t+1} ≈ x_t) when
+v_{-1} = τ², as the paper argues.
+"""
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FedOptConfig:
+    server_opt: str = "adam"       # adagrad | adam | yogi
+    eta: float = 0.1               # server lr η
+    eta_l: float = 0.05            # client lr η_l
+    beta1: float = 0.9
+    beta2: float = 0.999
+    tau: float = 1e-3              # adaptivity floor τ
+    v_init: float = None           # v_{-1}; default τ² (the paper's pain point)
+    client_momentum: float = 0.0
+
+
+def init_state(key, init_params_fn, cfg: FedOptConfig):
+    params = init_params_fn(key)
+    v0 = cfg.v_init if cfg.v_init is not None else cfg.tau ** 2
+    return {
+        "params": params,
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(lambda p: jnp.full_like(p, v0), params),
+        "round": jnp.int32(0),
+    }
+
+
+def build_round_step(loss_fn: Callable, cfg: FedOptConfig):
+    """Returns round_step(state, batch, key); batch leaves (M, K, ...)."""
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def client_run(params0, micro_k):
+        """K local SGD steps for one client; micro_k leaves (K, ...)."""
+
+        def step(carry, micro):
+            p, mom = carry
+            loss, g = grad_fn(p, micro)
+            mom = jax.tree.map(lambda m, gi: cfg.client_momentum * m + gi,
+                               mom, g)
+            p = jax.tree.map(lambda pi, mi: pi - cfg.eta_l * mi, p, mom)
+            return (p, mom), loss
+
+        mom0 = jax.tree.map(jnp.zeros_like, params0)
+        (p, _), losses = jax.lax.scan(step, (params0, mom0), micro_k)
+        delta = jax.tree.map(lambda a, b: a - b, p, params0)
+        return delta, losses
+
+    def round_step(state, batch, key):
+        del key
+        deltas, losses = jax.vmap(lambda mk: client_run(state["params"], mk))(
+            batch)                                   # (M, ...) pytree
+        delta = jax.tree.map(lambda d: d.mean(axis=0), deltas)
+
+        m = jax.tree.map(lambda m_, d: cfg.beta1 * m_ + (1 - cfg.beta1) * d,
+                         state["m"], delta)
+        if cfg.server_opt == "adagrad":
+            v = jax.tree.map(lambda v_, d: v_ + d * d, state["v"], delta)
+        elif cfg.server_opt == "adam":
+            v = jax.tree.map(
+                lambda v_, d: cfg.beta2 * v_ + (1 - cfg.beta2) * d * d,
+                state["v"], delta)
+        elif cfg.server_opt == "yogi":
+            v = jax.tree.map(
+                lambda v_, d: v_ - (1 - cfg.beta2) * d * d
+                * jnp.sign(v_ - d * d), state["v"], delta)
+        else:
+            raise ValueError(cfg.server_opt)
+        params = jax.tree.map(
+            lambda x, m_, v_: x + cfg.eta * m_ / (jnp.sqrt(v_) + cfg.tau),
+            state["params"], m, v)
+        new_state = {"params": params, "m": m, "v": v,
+                     "round": state["round"] + 1}
+        step_norm = jnp.sqrt(sum(jnp.vdot(a - b, a - b).real for a, b in zip(
+            jax.tree.leaves(params), jax.tree.leaves(state["params"]))))
+        return new_state, {"loss": losses.mean(), "step_norm": step_norm}
+
+    return round_step

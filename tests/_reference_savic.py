@@ -1,0 +1,247 @@
+"""Verbatim pre-refactor snapshots of core/savic.py and core/fedopt.py.
+
+Frozen at the commit that introduced core/engine.py; the engine regression
+tests in test_engine.py pin the refactored round to these trajectories.
+Not a test module (underscore prefix) - imported by tests only.
+"""
+"""SAVIC — Algorithm 1: Local SGD with preconditioning via scaling.
+
+A *round* = H local steps on each of M clients followed by one synchronization
+(parameter averaging) — the H-th step is the averaged one, exactly matching
+Algorithm 1's sync timestep. The preconditioner D̂ is updated only at sync and
+is identical on every client (*global scaling*, the analyzed setting); the
+experimental *local scaling* variant (per-client D updated every local step)
+is also implemented.
+
+Distribution contract (see sharding/partitioner.py): every state leaf carries
+a leading client dim M sharded over the plan's client axes — except the global
+D, which is client-replicated (no M dim), matching the algorithm. Local steps
+are ``vmap`` over M inside a ``lax.scan`` over H: XLA provably emits no
+cross-client collective inside the scan; the sync ``mean`` over M is the only
+cross-client traffic per round. That is the paper's communication saving,
+realized on the mesh.
+"""
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import preconditioner as PC
+from repro.core.preconditioner import PrecondConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SavicConfig:
+    gamma: float = 0.1                 # step size γ
+    beta1: float = 0.9                 # heavy-ball momentum (paper's exps: 0.9)
+    scaling: str = "global"            # "global" (Algorithm 1) | "local"
+    # D-stat at sync: "avg_grad" (H from the client-averaged sync gradient) |
+    # "avg_local" (average of per-client stats)
+    stat_source: str = "avg_grad"
+    average_momentum: bool = True      # average momentum buffers at sync
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0             # global-norm clip per local step (0=off)
+    use_fused_kernel: bool = False     # Pallas scaled_update kernel (TPU)
+    # sync compression (beyond-paper; cf. the quantization line of related
+    # work [19,20]): all-reduce params/momentum in this dtype ("" = full)
+    sync_dtype: str = ""
+    # partial participation (beyond-paper; the compared Algorithm 2 of [42]
+    # samples a client subset per round): fraction of clients whose updates
+    # enter the sync average; non-participants keep local state but are
+    # overwritten by the average (cross-device FedAvg semantics). 1.0 = all.
+    participation: float = 1.0
+
+
+def init_state(key, init_params_fn, pc_cfg: PrecondConfig, sv_cfg: SavicConfig,
+               n_clients: int):
+    """Build the SAVIC train state. x_0^m = x_0 (identical start, Algorithm 1)."""
+    params = init_params_fn(key)
+    params_m = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_clients,) + p.shape), params)
+    mom = jax.tree.map(jnp.zeros_like, params_m)
+    if sv_cfg.scaling == "local":
+        pstate = PC.init_state(pc_cfg, params_m)      # per-client D (leading M)
+        if "d" in pstate:
+            pstate["t"] = jnp.zeros((n_clients,), jnp.int32)  # per-client t
+    else:
+        pstate = PC.init_state(pc_cfg, params)        # global D (no M)
+    return {
+        "params": params_m,
+        "mom": mom,
+        "precond": pstate,
+        "round": jnp.int32(0),
+    }
+
+
+def _clip(grads, max_norm):
+    if not max_norm:
+        return grads
+    nrm = jnp.sqrt(sum(jnp.vdot(g, g).real
+                       for g in jax.tree.leaves(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / nrm)
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def _apply_update(params, mom, grads, pstate, pc_cfg, sv_cfg):
+    """x ← x − γ D̂^{-1} m,  m ← β₁ m + g   (heavy-ball, scaled)."""
+    g = grads
+    if sv_cfg.weight_decay:
+        g = jax.tree.map(lambda gi, p: gi + sv_cfg.weight_decay * p, g, params)
+    mom = jax.tree.map(lambda m, gi: sv_cfg.beta1 * m + gi, mom, g)
+    if sv_cfg.use_fused_kernel and pc_cfg.kind != "identity":
+        from repro.kernels import ops as kops
+        params = kops.scaled_update_tree(params, mom, pstate["d"],
+                                         sv_cfg.gamma, pc_cfg.alpha,
+                                         squared=pc_cfg.rule == "squared")
+    else:
+        direction = PC.precondition(pc_cfg, pstate, mom)
+        params = jax.tree.map(lambda p, d: p - sv_cfg.gamma * d,
+                              params, direction)
+    return params, mom
+
+
+def build_round_step(loss_fn: Callable, pc_cfg: PrecondConfig,
+                     sv_cfg: SavicConfig):
+    """loss_fn(params, microbatch) -> scalar.
+
+    Returns ``round_step(state, batch, key)`` where each batch leaf is
+    (M, H, ...): H microbatches per client per round. Returns (state, metrics).
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def local_step_one_client(params, mom, pstate, micro, key):
+        """One SGD-with-scaling step on one client. pstate: client's view."""
+        loss, grads = grad_fn(params, micro)
+        grads = _clip(grads, sv_cfg.grad_clip)
+        if sv_cfg.scaling == "local" and pc_cfg.kind != "identity":
+            stat = (PC.hutchinson_diag(loss_fn, params, micro, key)
+                    if pc_cfg.uses_hutchinson else PC.grad_stat(grads))
+            if pc_cfg.rule == "linear" and not pc_cfg.uses_hutchinson:
+                stat = jax.tree.map(jnp.abs, grads)
+            pstate = PC.update(pc_cfg, pstate, stat)
+        params, mom = _apply_update(params, mom, grads, pstate, pc_cfg, sv_cfg)
+        return params, mom, pstate, loss, grads
+
+    def round_step(state, batch, key):
+        M = jax.tree.leaves(state["params"])[0].shape[0]
+        H = jax.tree.leaves(batch)[0].shape[1]
+        local_global_d = sv_cfg.scaling == "global"
+        n_part = max(1, int(round(sv_cfg.participation * M)))
+
+        def scan_body(carry, xs):
+            params_m, mom_m, pstate, _ = carry
+            micro_m, keys = xs  # (M, ...) microbatch slice, (M,) keys
+
+            if local_global_d:
+                fn = lambda p, m, mc, k: local_step_one_client(
+                    p, m, pstate, mc, k)
+                params_m, mom_m, _, losses, grads = jax.vmap(fn)(
+                    params_m, mom_m, micro_m, keys)
+                new_pstate = pstate
+            else:
+                fn = local_step_one_client
+                params_m, mom_m, new_pstate, losses, grads = jax.vmap(fn)(
+                    params_m, mom_m, pstate, micro_m, keys)
+            return (params_m, mom_m, new_pstate, grads), losses
+
+        keys = jax.random.split(key, (H, M))
+        micro = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # (H,M,...)
+        grads0 = jax.tree.map(jnp.zeros_like, state["params"])
+        (params_m, mom_m, pstate, last_grads), losses = jax.lax.scan(
+            scan_body,
+            (state["params"], state["mom"], state["precond"], grads0),
+            (micro, keys))
+
+        drift_pre_sync = _drift(params_m)
+        # ---- partial participation: sample n_part clients for the average ---
+        if n_part < M:
+            perm = jax.random.permutation(jax.random.fold_in(key, 3), M)
+            w_part = jnp.zeros((M,)).at[perm[:n_part]].set(1.0 / n_part)
+        else:
+            w_part = jnp.full((M,), 1.0 / M)
+        # ---- synchronization: average the post-step client variables --------
+        def _wmean(p):
+            wb = w_part.reshape((M,) + (1,) * (p.ndim - 1)).astype(p.dtype)
+            return (p * wb).sum(axis=0)
+
+        if sv_cfg.sync_dtype:
+            sd = jnp.dtype(sv_cfg.sync_dtype)
+
+            def avg(p):
+                # the barrier pins the low-precision representation so BOTH
+                # legs of the sync (reduce + broadcast-back) move sync_dtype
+                # bytes; the f32 cast happens locally after (quantized
+                # averaging — same family as the quantization line of related
+                # work [19,20]; sync noise ~2^-8 relative)
+                q = jax.lax.optimization_barrier(p.astype(sd))
+                a = _wmean(q)
+                return jax.lax.optimization_barrier(a)
+        else:
+            avg = _wmean
+        params_avg = jax.tree.map(avg, params_m)
+        # broadcast back in sync_dtype; cast to master dtype locally
+        params_m = jax.tree.map(
+            lambda p, a: jnp.broadcast_to(a[None], (p.shape[0],) + a.shape
+                                          ).astype(p.dtype),
+            params_m, params_avg)
+        params_avg = jax.tree.map(
+            lambda x: x[0], params_m)
+        if sv_cfg.average_momentum:
+            mom_m = jax.tree.map(
+                lambda m: jnp.broadcast_to(avg(m)[None],
+                                           m.shape).astype(m.dtype), mom_m)
+
+        # ---- D update at sync (global scaling; Algorithm 1 line 4) ----------
+        if local_global_d and pc_cfg.kind != "identity":
+            g_last = last_grads  # (M, ...) — grads of the sync step
+            if sv_cfg.stat_source == "avg_grad":
+                g_avg = jax.tree.map(avg, g_last)  # participation+dtype apply
+                if pc_cfg.uses_hutchinson:
+                    sync_micro = jax.tree.map(lambda x: x[-1, 0], micro)
+                    stat = PC.hutchinson_diag(loss_fn, params_avg, sync_micro,
+                                              jax.random.fold_in(key, 7))
+                elif pc_cfg.rule == "linear":
+                    stat = jax.tree.map(jnp.abs, g_avg)
+                else:
+                    stat = PC.grad_stat(g_avg)
+            else:  # avg_local
+                if pc_cfg.uses_hutchinson:
+                    sync_micro = jax.tree.map(lambda x: x[-1], micro)  # (M,...)
+                    hk = jax.random.split(jax.random.fold_in(key, 7), M)
+                    stats = jax.vmap(lambda p, mc, k: PC.hutchinson_diag(
+                        loss_fn, p, mc, k))(params_m, sync_micro, hk)
+                elif pc_cfg.rule == "linear":
+                    stats = jax.tree.map(jnp.abs, g_last)
+                else:
+                    stats = PC.grad_stat(g_last)
+                stat = jax.tree.map(lambda s: s.mean(axis=0), stats)
+            pstate = PC.update(pc_cfg, pstate, stat)
+
+        new_state = {
+            "params": params_m,
+            "mom": mom_m,
+            "precond": pstate,
+            "round": state["round"] + 1,
+        }
+        metrics = {
+            "loss": losses.mean(),
+            "loss_per_client": losses[-1],
+            "client_drift": drift_pre_sync,
+        }
+        return new_state, metrics
+
+    return round_step
+
+
+def _drift(params_m):
+    """(1/M)Σ‖x^m − x̂‖² — the V_t of the analysis (0 right after sync)."""
+    def per_leaf(p):
+        mean = p.mean(axis=0, keepdims=True)
+        return jnp.sum((p - mean) ** 2)
+    return sum(jax.tree.leaves(jax.tree.map(per_leaf, params_m)))
+
+
+def average_params(state):
+    return jax.tree.map(lambda p: p[0], state["params"])

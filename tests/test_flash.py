@@ -1,11 +1,11 @@
 """models/flash.py (custom-VJP flash attention) vs dense reference —
 forward, gradients, windows, softcap, hypothesis shape sweeps."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.models.flash import flash_attention_bshd
 from repro.models.layers import _sdpa_dense

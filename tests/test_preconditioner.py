@@ -1,11 +1,10 @@
 """Property tests for the preconditioner family — Lemma 1 / Assumption 4."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.preconditioner import (PrecondConfig, beta_t, bounds, dhat,
                                        grad_stat, hutchinson_diag, init_state,
@@ -75,12 +74,37 @@ def test_identity_is_noop():
 
 
 def test_adam_debias_schedule():
-    """β_t = (β-β^{t+1})/(1-β^{t+1}) starts at β/(1+β)·... and -> β."""
+    """β_t = (β-β^{t+1})/(1-β^{t+1}) starts at 0 and -> β."""
     cfg = PrecondConfig(kind="adam", beta2=0.999)
     b0 = float(beta_t(cfg, jnp.int32(0)))
     b_inf = float(beta_t(cfg, jnp.int32(10_000)))
     assert b0 < b_inf < 0.999 + 1e-6
     assert abs(b_inf - 0.999) < 1e-4
+
+
+@pytest.mark.parametrize("beta", [0.9, 0.99, 0.999])
+def test_adam_debias_first_two_betas_pinned(beta):
+    """The documented schedule, exactly: for the update at 0-based step t,
+    β_t = (β − β^{t+1}) / (1 − β^{t+1}). Pins the first two values:
+
+        β_0 = (β − β) / (1 − β)   = 0          (first update: D² = H², the
+                                                debiased-Adam v̂_1 = g₁²)
+        β_1 = (β − β²) / (1 − β²) = β / (1+β)
+
+    Regression for the historical off-by-one ((β − β^{t+2})/(1 − β^{t+2}),
+    which gave β_0 = β/(1+β) and never hit the documented sequence).
+    """
+    cfg = PrecondConfig(kind="adam", beta2=beta)
+    b0 = float(beta_t(cfg, jnp.int32(0)))
+    b1 = float(beta_t(cfg, jnp.int32(1)))
+    np.testing.assert_allclose(b0, 0.0, atol=1e-7)
+    # fp32 cancellation in (β−β²)/(1−β²) costs ~1e-5 relative at β=0.999
+    np.testing.assert_allclose(b1, beta / (1.0 + beta), rtol=1e-4)
+    # and the debiased update really uses the full new stat at t=0
+    state = init_state(cfg, _tree(np.zeros(4)))
+    state = update(cfg, state, _tree(np.full(4, 9.0)))   # H² = 9
+    np.testing.assert_allclose(np.asarray(dhat(cfg, state)["a"]), 3.0,
+                               rtol=1e-6)
 
 
 def test_adagrad_accumulates():

@@ -85,7 +85,9 @@ def test_drift_zero_after_sync(problem):
 
 @pytest.mark.parametrize("kind", ["identity", "adam", "rmsprop", "oasis"])
 def test_convergence_all_preconditioners(problem, kind):
-    pc = PrecondConfig(kind=kind, alpha=1e-3)
+    # α=1e-2: with the corrected Adam debias (β_1=0) the floor must carry
+    # the early-round stability that the D⁰=1 init used to provide.
+    pc = PrecondConfig(kind=kind, alpha=1e-2)
     sv = SavicConfig(gamma=0.03, beta1=0.0)
     state, hist, _ = _run(problem, pc, sv, rounds=60)
     x = np.asarray(savic.average_params(state)["x"])
@@ -186,7 +188,7 @@ def test_fedopt_tau_zero_paper_5_2(problem):
 def test_sync_dtype_bf16_still_converges(problem):
     """Beyond-paper sync compression: bf16 quantized averaging still
     converges to a comparable neighborhood (precision note in §Perf C2)."""
-    pc = PrecondConfig(kind="adam", alpha=1e-3)
+    pc = PrecondConfig(kind="adam", alpha=1e-2)
     sv = SavicConfig(gamma=0.03, beta1=0.0, sync_dtype="bfloat16")
     state, hist, _ = _run(problem, pc, sv, rounds=60)
     x = np.asarray(savic.average_params(state)["x"])
@@ -196,7 +198,7 @@ def test_sync_dtype_bf16_still_converges(problem):
 def test_partial_participation(problem):
     """FedAvg-style client sampling: converges with participation<1 and the
     full-participation path is numerically unchanged."""
-    pc = PrecondConfig(kind="adam", alpha=1e-3)
+    pc = PrecondConfig(kind="adam", alpha=1e-2)
     sv_half = SavicConfig(gamma=0.03, beta1=0.0, participation=0.5)
     state, hist, _ = _run(problem, pc, sv_half, rounds=60)
     x = np.asarray(savic.average_params(state)["x"])

@@ -1,10 +1,10 @@
 """Mamba2 SSD: chunked algorithm vs naive recurrence + decode consistency."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models.ssm import (mamba2_decode, mamba2_forward, mamba2_init_cache,

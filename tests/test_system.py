@@ -49,8 +49,11 @@ def _train_cls(kind, scaling, rounds=12, seed=0):
     loader = FederatedLoader(data.x, data.y.astype(np.int32), parts,
                              batch_size=32, seed=seed)
     init, loss = _mlp_loss(data.x.shape[1], 10)
-    pc = PrecondConfig(kind=kind, alpha=1e-8)
-    sv = SavicConfig(gamma=0.02, beta1=0.9, scaling=scaling)
+    # α=1e-2 keeps Assumption 4's floor active: with the corrected Adam
+    # debias schedule (β_1 = 0) D̂ tracks |g| from the first sync, so the
+    # floor — not the D⁰=1 init — is what bounds the step early on.
+    pc = PrecondConfig(kind=kind, alpha=1e-2)
+    sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling)
     step = jax.jit(savic.build_round_step(loss, pc, sv))
     state = savic.init_state(jax.random.PRNGKey(seed), init, pc, sv, 10)
     key = jax.random.PRNGKey(seed + 1)
@@ -181,6 +184,18 @@ def test_train_driver_and_checkpoint_resume(tmp_path):
                            "3", "--h-local", "2", "--clients", "2", "--batch",
                            "2", "--seq", "32", "--ckpt", str(tmp_path)])
     assert [l["round"] for l in log2] == [2]
+
+
+def test_train_driver_engine_methods():
+    """--method runs the non-SAVIC engine presets end-to-end (adaptive server
+    state threads through the driver loop and metrics)."""
+    from repro.launch import train as train_mod
+    log = train_mod.main(["--arch", "qwen2-0.5b", "--reduced", "--method",
+                          "local-adam", "--rounds", "2", "--h-local", "2",
+                          "--clients", "2", "--batch", "2", "--seq", "32"])
+    assert len(log) == 2
+    assert all("step_norm" in l for l in log)
+    assert np.isfinite(log[-1]["loss"])
 
 
 def test_serve_driver():
