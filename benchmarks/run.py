@@ -15,6 +15,9 @@ under results/bench/.
   engine      wall-time per round for every round-engine method (savic,
               fedavg, fedadagrad, fedadam, fedyogi, local-adam) on the
               reduced config; also writes BENCH_engine.json at the repo root.
+  compression bytes-on-wire per round × wall-time for every sync compression
+              operator (none/topk/randk/int8-stochastic, ±error feedback) on
+              a method slice; writes BENCH_compression.json at the repo root.
   comm        communication volume per round: SAVIC sync vs per-step DDP
               (analytic, from param counts) + measured collective bytes from
               dry-run artifacts when present.
@@ -272,6 +275,42 @@ ENGINE_BENCH_METHODS = ("savic", "fedavg", "fedadagrad", "fedadam", "fedyogi",
                         "local-adam")
 
 
+def _time_round_loop(spec, init, loss, data, parts, rounds, H, M, seed):
+    """Shared engine/compression timing loop: wall time per round + analytic
+    bytes-on-wire per round (benchmark hygiene: every engine timing record
+    carries its communication volume)."""
+    from repro.core import engine
+    from repro.data import FederatedLoader
+
+    step = jax.jit(engine.build_round_step(loss, spec))
+    state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
+    loader = FederatedLoader(data.x, data.y.astype(np.int32), parts[:M],
+                             batch_size=32, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    times = []
+    for r in range(rounds):
+        key, k = jax.random.split(key)
+        batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
+        t0 = time.perf_counter()
+        state, met = step(state, batch, k)
+        jax.block_until_ready(state)
+        times.append((time.perf_counter() - t0) * 1e3)
+    wire = engine.bytes_on_wire(
+        spec, jax.eval_shape(init, jax.random.PRNGKey(seed)))
+    # only sampled clients transmit under partial participation
+    n_tx = max(1, int(round(spec.sync.participation * M)))
+    return {
+        "round_ms_first": round(times[0], 3),        # includes compile
+        "round_ms_mean": round(float(np.mean(times[1:])), 3),
+        "round_ms_p50": round(float(np.median(times[1:])), 3),
+        "rounds": rounds,
+        "final_loss": round(float(met["loss"]), 4),
+        "wire_bytes_per_client_round": wire["total_bytes"],
+        "wire_bytes_per_round": wire["total_bytes"] * n_tx,
+        "compression_x": wire["compression_x"],
+    }
+
+
 def bench_engine(rounds=12, H=4, M=8, seed=0):
     """Per-round wall time for every engine method on the reduced fig1-style
     config (MLP on heterogeneous classification). Emits the usual CSV plus a
@@ -293,26 +332,8 @@ def bench_engine(rounds=12, H=4, M=8, seed=0):
         kw = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
         kw.update(overrides.get(method, {}))
         spec = engine.method_spec(method, **kw)
-        step = jax.jit(engine.build_round_step(loss, spec))
-        state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
-        loader = FederatedLoader(data.x, data.y.astype(np.int32), parts[:M],
-                                 batch_size=32, seed=seed)
-        key = jax.random.PRNGKey(seed + 1)
-        times = []
-        for r in range(rounds):
-            key, k = jax.random.split(key)
-            batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
-            t0 = time.perf_counter()
-            state, met = step(state, batch, k)
-            jax.block_until_ready(state)
-            times.append((time.perf_counter() - t0) * 1e3)
-        rec = {
-            "round_ms_first": round(times[0], 3),        # includes compile
-            "round_ms_mean": round(float(np.mean(times[1:])), 3),
-            "round_ms_p50": round(float(np.median(times[1:])), 3),
-            "rounds": rounds,
-            "final_loss": round(float(met["loss"]), 4),
-        }
+        rec = _time_round_loop(spec, init, loss, data, parts, rounds, H, M,
+                               seed)
         methods_json[method] = rec
         rows.append({"method": method, **rec})
         out.append(("engine", f"round_ms_{method.replace('-', '_')}",
@@ -326,6 +347,68 @@ def bench_engine(rounds=12, H=4, M=8, seed=0):
                               "backend": jax.default_backend()},
                    "methods": methods_json}, f, indent=1)
     return out, _emit(rows, "engine")
+
+
+# --------------------------------------------------------------------------- #
+# compression — bytes-on-wire × wall-time per (method, operator)
+#               -> BENCH_compression.json
+# --------------------------------------------------------------------------- #
+
+
+COMPRESSION_BENCH_CASES = (
+    ("none", 1.0, False),
+    ("topk", 0.1, False),
+    ("topk", 0.1, True),
+    ("randk", 0.1, False),
+    ("int8-stochastic", 1.0, False),
+)
+COMPRESSION_BENCH_METHODS = ("savic", "fedavg", "fedadam")
+
+
+def bench_compression(rounds=10, H=4, M=8, seed=0):
+    """Every compression operator × a representative method slice on the
+    reduced fig1-style config: bytes-on-wire per round alongside wall time, so
+    BENCH_compression.json seeds a communication-volume trajectory (not just a
+    latency one). EF topk / int8 rows double as end-to-end convergence
+    sanity (final_loss)."""
+    from repro.core import engine
+    from repro.data import ClassificationData, main_class_partition
+
+    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
+    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
+    rows, out = [], []
+    entries = {}
+    for method in COMPRESSION_BENCH_METHODS:
+        for op, k, ef in COMPRESSION_BENCH_CASES:
+            init, loss, _ = _mlp(data.x.shape[1], 10)
+            spec = engine.method_spec(
+                method, gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1,
+                compression=engine.CompressionSpec(op=op, k=k,
+                                                   error_feedback=ef))
+            rec = _time_round_loop(spec, init, loss, data, parts, rounds, H,
+                                   M, seed)
+            tag = f"{method}__{op}" + (f"_k{k}" if op in ("topk", "randk")
+                                       else "") + ("_ef" if ef else "")
+            entries[tag] = rec
+            rows.append({"method": method, "op": op, "k": k,
+                         "error_feedback": ef, **rec})
+    for method in COMPRESSION_BENCH_METHODS:
+        base = entries[f"{method}__none"]
+        ef_ = entries[f"{method}__topk_k0.1_ef"]
+        out.append(("compression", f"wire_x_topk_{method.replace('-', '_')}",
+                    round(base["wire_bytes_per_round"]
+                          / ef_["wire_bytes_per_round"], 1)))
+        out.append(("compression", f"round_ms_topk_ef_{method.replace('-', '_')}",
+                    ef_["round_ms_mean"]))
+    path_json = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_compression.json")
+    with open(path_json, "w") as f:
+        json.dump({"bench": "compression_bytes_x_walltime",
+                   "config": {"model": "mlp_cls_reduced", "clients": M,
+                              "h_local": H, "rounds": rounds,
+                              "backend": jax.default_backend()},
+                   "entries": entries}, f, indent=1)
+    return out, _emit(rows, "compression")
 
 
 # --------------------------------------------------------------------------- #
@@ -418,6 +501,7 @@ BENCHES = {
     "thm2": bench_thm2,
     "sec52": bench_sec52,
     "engine": bench_engine,
+    "compression": bench_compression,
     "comm": bench_comm,
     "kernels": bench_kernels,
 }

@@ -42,6 +42,9 @@ class SavicConfig:
     # enter the sync average; non-participants keep local state but are
     # overwritten by the average (cross-device FedAvg semantics). 1.0 = all.
     participation: float = 1.0
+    # sync delta compression (topk/randk/int8-stochastic, optional EF
+    # residual; engine SyncStrategy layer, DESIGN.md §4)
+    compression: engine.CompressionSpec = engine.CompressionSpec()
 
 
 def engine_spec(pc_cfg: PrecondConfig, sv_cfg: SavicConfig) -> engine.EngineSpec:
@@ -54,7 +57,8 @@ def engine_spec(pc_cfg: PrecondConfig, sv_cfg: SavicConfig) -> engine.EngineSpec
             use_fused_kernel=sv_cfg.use_fused_kernel),
         sync=engine.SyncSpec(
             participation=sv_cfg.participation, sync_dtype=sv_cfg.sync_dtype,
-            average_momentum=sv_cfg.average_momentum),
+            average_momentum=sv_cfg.average_momentum,
+            compression=sv_cfg.compression),
         server=engine.ServerSpec(kind="average"),
         precond=pc_cfg)
 

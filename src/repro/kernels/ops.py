@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize_update as _qu
 from repro.kernels import scaled_update as _su
 from repro.kernels import ssd_scan as _ssd
 from repro.utils.tree import tree_from_paths
@@ -46,6 +47,20 @@ def scaled_update_tree(params, mom, d_tree, gamma, alpha, squared=True):
                           alpha=alpha, squared=squared)[0]
             for p, m, d in zip(flat_p, flat_m, flat_d)]
     return jax.tree.unflatten(treedef, news)
+
+
+def quantize_update(x, u, scale):
+    """Fused stochastic int8 encode + fp32 decode on arbitrarily-shaped arrays.
+
+    ``u`` are U[0,1) draws shaped like x; ``scale`` broadcasts to x.shape
+    (per-client absmax/127 in the engine). Returns (q int8, decoded fp32)
+    with x's shape.
+    """
+    shape = x.shape
+    flat = lambda a: jnp.broadcast_to(a, shape).reshape(-1).astype(jnp.float32)
+    q, dec = _qu.quantize_update_flat(flat(x), flat(u), flat(scale),
+                                      interpret=_interpret())
+    return q.reshape(shape), dec.reshape(shape).astype(x.dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,

@@ -13,6 +13,15 @@ def scaled_update_ref(p, m, g, d, *, gamma, beta1, alpha, squared=True):
     return p - gamma * m_new / dhat, m_new
 
 
+def quantize_update_ref(x, u, scale):
+    """Stochastic int8 QDQ: q = clip(floor(x/s + u), ±127), dec = q·s."""
+    s = jnp.broadcast_to(scale, x.shape).astype(jnp.float32)
+    safe = jnp.where(s > 0, s, 1.0)
+    v = jnp.where(s > 0, x.astype(jnp.float32) / safe, 0.0)
+    qf = jnp.clip(jnp.floor(v + u), -127.0, 127.0)
+    return qf.astype(jnp.int8), (qf * s).astype(x.dtype)
+
+
 def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
     """q (B,H,S,D), k/v (B,Hk,S,D) -> (B,H,S,D). Dense fp32 softmax."""
     B, H, S, D = q.shape

@@ -34,7 +34,7 @@ from repro.utils.hlo_cost import analyze as hlo_analyze
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            mode: str = "auto", method: str = "savic",
+            mode: str = "auto", method: str = "savic", compression=None,
             out_dir: str = "results/dryrun",
             save: bool = True, call=None, tag: str = "", verbose=True):
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -46,7 +46,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     }
     t0 = time.time()
     built = build_step(arch, shape_name, mesh, mode=mode, method=method,
-                       call=call) \
+                       compression=compression, call=call) \
         if shape.kind == "train" else build_step(arch, shape_name, mesh,
                                                  call=call)
     with mesh:
@@ -98,6 +98,17 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "op_census": op_census(hlo),
         "ok": True,
     })
+    spec = built.meta.get("engine_spec")
+    if spec is not None:
+        # sync compression (engine SyncStrategy layer) + analytic wire volume
+        import dataclasses as _dc
+
+        from repro.core import engine as _engine
+        params_one = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            built.args[0]["params"])
+        rec["compression"] = _dc.asdict(spec.sync.compression)
+        rec["sync_payload_per_client"] = _engine.bytes_on_wire(spec, params_one)
     if verbose:
         print(f"[dryrun] {arch:18s} {shape_name:12s} mesh={rec['mesh']:8s} "
               f"mode={rec['mode']:6s} flops={rec['flops']:.3e} "
@@ -123,16 +134,26 @@ def main():
     ap.add_argument("--method", default="savic",
                     help="round-engine method for train shapes "
                          "(savic|fedadagrad|fedadam|fedyogi|local-adam)")
+    ap.add_argument("--compression", default="none",
+                    help="sync delta compression for train shapes "
+                         "(none|topk|randk|int8-stochastic)")
+    ap.add_argument("--compression-k", type=float, default=0.1)
+    ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
+    from repro.core.engine import CompressionSpec
+    comp = None if args.compression == "none" else CompressionSpec(
+        op=args.compression, k=args.compression_k,
+        error_feedback=args.error_feedback)
 
     if args.all:
         failures = []
         for arch, shape in pairs_to_run():
             try:
                 run_one(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
-                        method=args.method, out_dir=args.out, tag=args.tag)
+                        method=args.method, compression=comp,
+                        out_dir=args.out, tag=args.tag)
             except Exception as e:  # noqa
                 failures.append((arch, shape, repr(e)))
                 print(f"[dryrun] FAIL {arch} {shape}: {e}", flush=True)
@@ -143,7 +164,8 @@ def main():
         raise SystemExit(1 if failures else 0)
 
     run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
-            method=args.method, out_dir=args.out, tag=args.tag)
+            method=args.method, compression=comp, out_dir=args.out,
+            tag=args.tag)
 
 
 if __name__ == "__main__":

@@ -69,7 +69,8 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                      call: Optional[ModelCallConfig] = None,
                      reduced: bool = False, h_local: Optional[int] = None,
                      sv: Optional[SavicConfig] = None,
-                     engine_spec: Optional[engine.EngineSpec] = None):
+                     engine_spec: Optional[engine.EngineSpec] = None,
+                     compression: Optional[engine.CompressionSpec] = None):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
     if call is None:
@@ -91,6 +92,11 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     H = h_local or savic_round_h(shape)
 
     spec = engine_spec or _method_engine_spec(method, pc_kind, sv)
+    if compression is not None:
+        # engine-level knob (like --participation/--sync-dtype): applies to
+        # every method, composing with an explicit engine_spec too
+        spec = dataclasses.replace(
+            spec, sync=dataclasses.replace(spec.sync, compression=compression))
     round_step = engine.build_round_step(model.loss, spec)
 
     def step(state, batch):
@@ -121,7 +127,8 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
         out_shardings=(ns(state_spec), ns(metrics_spec)),
         donate=(0,),
         meta={"mode": mode, "method": method, "clients": M, "h_local": H,
-              "b_client": b_client, "cfg": cfg, "plan": plan},
+              "b_client": b_client, "cfg": cfg, "plan": plan,
+              "engine_spec": spec},
     )
 
 
@@ -142,6 +149,9 @@ def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):
         pspec_1 = params_pspecs(cfg, state_shape["server"]["m"], mesh, plan,
                                 client_dim=False)
         state_spec["server"] = {"m": pspec_1, "v": pspec_1}
+    if "ef" in state_shape:
+        # EF compression residual: per-client, sharded exactly like params/mom
+        state_spec["ef"] = pspec_m
     return state_spec
 
 

@@ -60,6 +60,14 @@ def main(argv=None):
                     help="adaptive-server floor τ (fed*/local-adam)")
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--sync-dtype", default="")
+    ap.add_argument("--compression", default="none",
+                    choices=list(engine.COMPRESSION_OPS),
+                    help="client->server delta compression (engine-level: "
+                         "applies to every method)")
+    ap.add_argument("--compression-k", type=float, default=0.1,
+                    help="kept fraction per leaf for topk/randk")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry the EF residual buffer in the state pytree")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log", default="")
@@ -71,12 +79,15 @@ def main(argv=None):
     call = ModelCallConfig(dtype=getattr(jnp, args.dtype))
     model = build(cfg, call)
 
+    comp = engine.CompressionSpec(op=args.compression, k=args.compression_k,
+                                  error_feedback=args.error_feedback)
     if args.method == "savic":
         pc = PrecondConfig(kind=args.preconditioner, alpha=args.alpha)
         sv = SavicConfig(gamma=args.gamma, beta1=args.beta1,
                          scaling=args.scaling,
                          participation=args.participation,
-                         sync_dtype=args.sync_dtype)
+                         sync_dtype=args.sync_dtype,
+                         compression=comp)
         spec = savic.engine_spec(pc, sv)
     else:
         spec = engine.method_spec(
@@ -84,8 +95,12 @@ def main(argv=None):
             beta1=args.beta1, eta=args.server_eta, eta_l=args.gamma,
             tau=args.tau, server_beta1=args.server_beta1,
             participation=args.participation,
-            sync_dtype=args.sync_dtype)
+            sync_dtype=args.sync_dtype, compression=comp)
     round_step = jax.jit(engine.build_round_step(model.loss, spec))
+    wire = engine.bytes_on_wire(spec, jax.eval_shape(model.init,
+                                                     jax.random.PRNGKey(0)))
+    print(f"[train] sync payload/client/round: {wire['total_bytes']/1e6:.3f} "
+          f"MB ({wire['compression_x']}x vs uncompressed)", flush=True)
 
     state = engine.init_state(jax.random.PRNGKey(args.seed), model.init, spec,
                               args.clients)
@@ -113,6 +128,8 @@ def main(argv=None):
         if "step_norm" in metrics:
             rec["step_norm"] = float(metrics["step_norm"])
             extra = f" step {rec['step_norm']:.3e}"
+        if "compression_err" in metrics:
+            rec["compression_err"] = float(metrics["compression_err"])
         log.append(rec)
         print(f"[train] round {r:4d} loss {loss:.4f} drift {drift:.3e}"
               f"{extra} ({time.time()-t0:.1f}s)", flush=True)

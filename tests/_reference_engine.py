@@ -1,38 +1,12 @@
-"""Generic distributed-round engine: ClientLoop × SyncStrategy × ServerUpdate.
+"""VERBATIM pre-compression snapshot of src/repro/core/engine.py (PR 1 state).
 
-The paper describes scaling generically — one analysis, swappable D̂ rules.
-This module does the same for the *round structure*: every local method in the
-repo (SAVIC / Algorithm 1, the FedOpt baselines of [42], and composed scenarios
-such as Local-Adam with an adaptive server, cf. arXiv:2409.13155) is one
-configuration of three orthogonal layers:
+Pinning reference for tests/test_compression.py: the post-compression engine
+with ``compression.op == "none"`` (or any identity-resolving CompressionSpec)
+must emit bit-identical trajectories to this snapshot for every method in
+METHODS. Same pattern as _reference_savic.py / _reference_fedopt.py: the
+reference runs in-session so the comparison is exact on this backend.
 
-  * **ClientLoop**   — H local steps on each of M clients, ``vmap`` over M
-    inside a ``lax.scan`` over H (XLA provably emits no cross-client collective
-    inside the scan). The per-step update is pluggable: plain SGD, heavy-ball,
-    or locally-scaled via ``preconditioner.py``, with the fused Pallas
-    ``scaled_update`` kernel as a first-class option.
-  * **SyncStrategy** — the only cross-client traffic per round: full mean,
-    weighted partial participation (FedAvg-style client sampling), quantized
-    ``sync_dtype`` all-reduce, and a pluggable delta **compression** layer
-    (``none | topk | randk | int8-stochastic``, optional EF error-feedback
-    residual; DESIGN.md §4). Lifted out of SAVIC so *every* method gets them.
-  * **ServerUpdate** — what the server does with the synchronized average:
-    identity averaging (Algorithm 1), or an adaptive m/v server step
-    (FedAdaGrad / FedAdam / FedYogi, Algorithm 2 of [42]).
-
-Distribution contract (see DESIGN.md §2): every client-state leaf carries a
-leading client dim M sharded over the plan's client axes; the global D and the
-adaptive server's (m, v) are client-replicated (no M dim). The state pytree is
-
-    {"params": (M, ...), "mom": (M, ...), "precond": {...}, "round": i32,
-     ["server": {"m": (...), "v": (...)}], ["ef": (M, ...)]}
-
-with the ``server`` entry present only for adaptive-server methods and the
-``ef`` error-feedback residual (per-client, shaped like ``params``) present
-only when the sync compression carries a residual (DESIGN.md §4).
-
-``core/savic.py`` and ``core/fedopt.py`` are thin method definitions over this
-engine; new methods are a ~50-line preset (see ``method_spec``).
+Do not edit (except this header); regenerate by snapshotting engine.py.
 """
 from __future__ import annotations
 
@@ -70,75 +44,12 @@ class ClientLoopSpec:
             raise ValueError(self.scaling)
 
 
-COMPRESSION_OPS = ("none", "topk", "randk", "int8-stochastic")
-
-
-@dataclasses.dataclass(frozen=True)
-class CompressionSpec:
-    """Compression of the client→server round delta Δ_m = x_{m,H} − x_t.
-
-    Operators (DESIGN.md §4; cf. arXiv:2109.05109 / arXiv:2409.13155):
-      none             identity — the uncompressed sync path, bit-for-bit.
-      topk             keep the k·dim largest-|Δ| entries per leaf per client
-                       (biased — pair with ``error_feedback``).
-      randk            keep k·dim uniformly sampled entries, rescaled by
-                       dim/(k·dim) so the compressor is unbiased. With
-                       ``error_feedback`` the rescale is dropped: EF needs a
-                       contractive compressor, and the dim/k amplification
-                       would grow the residual ~(dim/k − 1)× per round
-                       (unrescaled randk is a masking sparsifier, so the EF
-                       residual is its exact complement, like topk).
-      int8-stochastic  per-(client, leaf) absmax/127 scale, stochastic-round
-                       int8 encode + fp32 decode (unbiased). With
-                       ``use_fused_kernel`` the encode+decode runs as the
-                       fused Pallas ``quantize_update`` kernel.
-
-    ``error_feedback`` carries the EF residual e_m in the state pytree
-    (``state["ef"]``, leading M dim): u_m = Δ_m + e_m is compressed instead of
-    Δ_m and e'_m = u_m − C(u_m) is what the wire dropped this round.
-    """
-    op: str = "none"
-    k: float = 1.0                 # kept fraction per leaf (topk / randk)
-    error_feedback: bool = False   # EF residual buffer (state["ef"])
-    use_fused_kernel: bool = False # Pallas quantize_update (int8-stochastic)
-
-    def __post_init__(self):
-        if self.op not in COMPRESSION_OPS:
-            raise ValueError(
-                f"compression op {self.op!r}; expected one of {COMPRESSION_OPS}")
-        if not 0.0 < self.k <= 1.0:
-            raise ValueError(f"compression k={self.k}; expected 0 < k <= 1")
-
-    def is_identity(self) -> bool:
-        """True iff this spec provably compresses nothing. The engine then
-        emits the exact uncompressed sync program (the bit-for-bit contract
-        pinned by tests/test_compression.py) and carries no ``ef`` leaf."""
-        return self.op == "none" or (self.op in ("topk", "randk")
-                                     and self.k >= 1.0)
-
-
 @dataclasses.dataclass(frozen=True)
 class SyncSpec:
-    """The weighted, optionally quantized/compressed, optionally partial sync
-    average."""
+    """The weighted, optionally quantized, optionally partial sync average."""
     participation: float = 1.0     # fraction of clients entering the average
     sync_dtype: str = ""           # all-reduce dtype ("" = full precision)
     average_momentum: bool = True  # also average momentum buffers at sync
-    compression: CompressionSpec = CompressionSpec()
-
-    def __post_init__(self):
-        if not 0.0 < self.participation <= 1.0:
-            raise ValueError(f"participation={self.participation}; "
-                             f"expected 0 < p <= 1")
-        if self.sync_dtype:
-            try:
-                jnp.dtype(self.sync_dtype)
-            except TypeError:
-                raise ValueError(f"sync_dtype {self.sync_dtype!r} is not a "
-                                 f"dtype") from None
-        if not isinstance(self.compression, CompressionSpec):
-            raise ValueError(f"compression must be a CompressionSpec, got "
-                             f"{type(self.compression).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,8 +92,6 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
                 server_beta1: float = 0.9, server_beta2: float = 0.999,
                 v_init: Optional[float] = None,
                 participation: float = 1.0, sync_dtype: str = "",
-                compression="none", compression_k: float = 1.0,
-                error_feedback: bool = False,
                 use_fused_kernel: bool = False) -> EngineSpec:
     """Canonical EngineSpec for each named method.
 
@@ -195,20 +104,8 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
                 ``server_beta1``.
     local-adam  composed scenario (cf. 2409.13155): locally-scaled clients
                 (per-client D updated every step) AND an adaptive Adam server.
-
-    ``compression`` is either a CompressionSpec or an operator name (then
-    ``compression_k`` / ``error_feedback`` fill in the rest) — every method
-    gets compressed sync for free, opening the compressed-FedAdam /
-    compressed-Local-Adam scenario family. ``use_fused_kernel`` enables both
-    fused Pallas kernels: the client-loop ``scaled_update`` and (for
-    int8-stochastic) the sync ``quantize_update``.
     """
-    comp = compression if isinstance(compression, CompressionSpec) \
-        else CompressionSpec(op=compression, k=compression_k,
-                             error_feedback=error_feedback,
-                             use_fused_kernel=use_fused_kernel)
-    sync = SyncSpec(participation=participation, sync_dtype=sync_dtype,
-                    compression=comp)
+    sync = SyncSpec(participation=participation, sync_dtype=sync_dtype)
     if method == "savic":
         # one source of truth for the SAVIC composition: SavicConfig ->
         # engine_spec in core/savic.py (lazy import; savic imports engine)
@@ -217,8 +114,7 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
             PrecondConfig(kind=pc_kind, alpha=alpha),
             SavicConfig(gamma=gamma, beta1=beta1, scaling=scaling,
                         use_fused_kernel=use_fused_kernel,
-                        participation=participation, sync_dtype=sync_dtype,
-                        compression=comp))
+                        participation=participation, sync_dtype=sync_dtype))
     if method == "fedavg":
         # plain Local SGD clients (no momentum), plain average — textbook
         # FedAvg; heavy-ball local SGD is savic with pc_kind="identity"
@@ -277,12 +173,6 @@ def init_state(key, init_params_fn, spec: EngineSpec, n_clients: int):
             "m": jax.tree.map(jnp.zeros_like, params),
             "v": jax.tree.map(lambda p: jnp.full_like(p, v0), params),
         }
-    comp = spec.sync.compression
-    if comp.error_feedback and not comp.is_identity():
-        # EF residual e_m: per-client, shaped like params (DESIGN.md §4).
-        # Identity compression drops nothing, so the leaf would stay zero —
-        # omitted to keep the state pytree (and program) bit-identical.
-        state["ef"] = jax.tree.map(jnp.zeros_like, params_m)
     return state
 
 
@@ -377,94 +267,6 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec):
         return params_m, mom_m, pstate, last_grads, losses
 
     return local_step_one_client, run
-
-
-# --------------------------------------------------------------------------- #
-# Compression (DESIGN.md §4)
-# --------------------------------------------------------------------------- #
-
-
-def _k_count(k: float, n: int) -> int:
-    """Static kept-entry count for a leaf of n elements (at least 1)."""
-    return max(1, min(n, int(round(k * n))))
-
-
-def _compress_leaf(spec: CompressionSpec, x, key):
-    """Apply one compression operator to a (M, ...) leaf of round deltas.
-
-    Per-client semantics throughout: topk/randk select k·n entries per client
-    row, int8-stochastic uses a per-client absmax/127 scale. Returns the
-    decoded (server-side) fp32 view of what crossed the wire, same shape as x.
-    """
-    M = x.shape[0]
-    flat = x.reshape(M, -1)
-    n = flat.shape[1]
-    if spec.op in ("topk", "randk"):
-        kc = _k_count(spec.k, n)
-        # randk = topk on uniform scores: same selection code, random ranking
-        scores = jnp.abs(flat) if spec.op == "topk" \
-            else jax.random.uniform(key, flat.shape)
-        thresh = jax.lax.top_k(scores, kc)[0][:, -1:]
-        kept = jnp.where(scores >= thresh, flat, 0.0)
-        if spec.op == "randk" and not spec.error_feedback:
-            # unbiased rescale E[C(x)] = x — only without EF: the dim/k
-            # amplification is non-contractive and blows up the residual
-            kept = kept * (n / kc)
-        return kept.reshape(x.shape)
-    # int8-stochastic: E[floor(v + U[0,1))] = v — unbiased QDQ
-    absmax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
-    scale = absmax / 127.0
-    u01 = jax.random.uniform(key, flat.shape)
-    if spec.use_fused_kernel:
-        from repro.kernels import ops as kops
-        _, dec = kops.quantize_update(flat, u01, scale)
-    else:
-        # one source of truth for the QDQ formula: the kernel's jnp oracle
-        # (the Pallas kernel is pinned bit-identical to it)
-        from repro.kernels import ref as kref
-        _, dec = kref.quantize_update_ref(flat, u01, scale)
-    return dec.reshape(x.shape)
-
-
-def compress_tree(spec: CompressionSpec, deltas, key):
-    """Compress a pytree of (M, ...) round deltas; per-leaf folded keys."""
-    leaves, treedef = jax.tree.flatten(deltas)
-    keys = jax.random.split(jax.random.fold_in(key, 17), len(leaves))
-    return jax.tree.unflatten(
-        treedef, [_compress_leaf(spec, x, k) for x, k in zip(leaves, keys)])
-
-
-def bytes_on_wire(spec: EngineSpec, params) -> dict:
-    """Analytic client→server sync payload per round for ONE client.
-
-    ``params`` is a single-replica pytree (arrays or ShapeDtypeStructs, no
-    leading M dim). Accounting: topk/randk send (fp32 value, int32 index)
-    pairs; int8-stochastic sends 1 byte/element + one fp32 scale per leaf;
-    uncompressed legs move ``sync_dtype`` bytes (fp32 when unset). Momentum,
-    when averaged (``average_momentum`` under an averaging server), always
-    moves uncompressed.
-    """
-    sy, comp = spec.sync, spec.sync.compression
-    elem = jnp.dtype(sy.sync_dtype).itemsize if sy.sync_dtype else 4
-    delta = raw = 0
-    for leaf in jax.tree.leaves(params):
-        n = 1
-        for s in leaf.shape:
-            n *= int(s)
-        raw += n * 4
-        if comp.is_identity():
-            delta += n * elem
-        elif comp.op in ("topk", "randk"):
-            delta += _k_count(comp.k, n) * (4 + 4)
-        else:  # int8-stochastic
-            delta += n * 1 + 4
-    mom = raw if (spec.server.kind == "average"
-                  and sy.average_momentum) else 0
-    if mom and sy.sync_dtype:
-        mom = mom // 4 * elem
-    return {"delta_bytes": delta, "momentum_bytes": mom,
-            "total_bytes": delta + mom, "uncompressed_bytes": raw + mom,
-            "compression_x": round((raw + mom) / max(delta + mom, 1), 2)}
 
 
 # --------------------------------------------------------------------------- #
@@ -579,27 +381,7 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec):
 
         # ---- SyncStrategy: the only cross-client traffic per round ---------
         avg = make_sync(sy, key, M)
-        comp = sy.compression
-        new_ef = delta_avg = comp_err = None
-        if comp.is_identity():
-            # bit-for-bit the uncompressed program (DESIGN.md §4 contract) —
-            # no delta reconstruction, no residual state
-            params_avg = jax.tree.map(avg, params_m)
-        else:
-            # compress the round delta Δ_m = x_{m,H} − x_t (clients start each
-            # round at the common broadcast point, so x_t = params[0])
-            x_ref = jax.tree.map(lambda p: p[0], state["params"])
-            u_m = jax.tree.map(lambda p, x: p - x[None], params_m, x_ref)
-            if comp.error_feedback:
-                u_m = jax.tree.map(jnp.add, u_m, state["ef"])
-            c_m = compress_tree(comp, u_m, key)
-            if comp.error_feedback:
-                new_ef = jax.tree.map(jnp.subtract, u_m, c_m)
-            comp_err = sum(jnp.vdot(u - c, u - c).real for u, c in zip(
-                jax.tree.leaves(u_m), jax.tree.leaves(c_m)))
-            delta_avg = jax.tree.map(avg, c_m)
-            params_avg = jax.tree.map(
-                lambda x, d: x + d.astype(x.dtype), x_ref, delta_avg)
+        params_avg = jax.tree.map(avg, params_m)
 
         if sv.kind == "average":
             params_m = _broadcast_back(params_m, params_avg)
@@ -640,23 +422,13 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec):
             "loss_per_client": losses[-1],
             "client_drift": drift_pre_sync,
         }
-        if comp_err is not None:
-            metrics["compression_err"] = comp_err  # Σ‖u_m − C(u_m)‖²
 
         # ---- ServerUpdate ---------------------------------------------------
         new_state = {"round": state["round"] + 1, "precond": pstate}
-        if new_ef is not None:
-            new_state["ef"] = new_ef
         if sv.kind == "adaptive":
             x_prev = jax.tree.map(lambda p: p[0], state["params"])
-            if delta_avg is not None:
-                # compressed path: Δ is exactly the averaged compressed delta
-                # (params_avg = x_prev + Δ would re-add/re-subtract x_prev)
-                delta = jax.tree.map(
-                    lambda d, x: d.astype(x.dtype), delta_avg, x_prev)
-            else:
-                delta = jax.tree.map(
-                    lambda a, x: a.astype(x.dtype) - x, params_avg, x_prev)
+            delta = jax.tree.map(
+                lambda a, x: a.astype(x.dtype) - x, params_avg, x_prev)
             x_new, server = _adaptive_server_update(sv, state["server"],
                                                     x_prev, delta)
             params_m = _broadcast_back(params_m, x_new)

@@ -1,0 +1,429 @@
+"""Compressed-communication layer — the differential test harness.
+
+Locks down engine.CompressionSpec (DESIGN.md §4):
+  * differential pinning: compression "none" (and every identity-resolving
+    spec) is bit-identical to the pre-PR engine snapshot
+    (tests/_reference_engine.py) for all six METHODS;
+  * operator identities at k=dim;
+  * EF topk converges on the Section 5 heterogeneous quadratic where plain
+    topk stalls (within 2% of the uncompressed final loss);
+  * the fused Pallas quantize_update kernel is bit-equal to the inline path
+    and to the pure-jnp oracle;
+  * property-style invariants (int8/randk unbiasedness, topk+EF residual
+    identity, participation weights under compression) — deterministic
+    versions plus hypothesis variants via _hypothesis_compat;
+  * spec validation (the SyncSpec.__post_init__ fix).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import _reference_engine as ref_engine
+from _hypothesis_compat import given, settings, st
+from repro.core import engine
+from repro.data import QuadraticLoader, QuadraticProblem
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return QuadraticProblem.make(d=24, M=4, mu=0.5, L=5.0, sigma=0.3, seed=0)
+
+
+def _quad_loss(problem):
+    Q = jnp.asarray(problem.Q, jnp.float32)
+    b = jnp.asarray(problem.b, jnp.float32)
+
+    def loss(params, micro):
+        x = params["x"]
+        return 0.5 * (x - b[0]) @ Q[0] @ (x - b[0]) + micro["z"] @ x
+
+    return loss
+
+
+def _run(problem, build_round_step, init_state, spec, rounds=4, H=3, seed=0,
+         n_clients=4):
+    loss = _quad_loss(problem)
+    step = jax.jit(build_round_step(loss, spec))
+    state = init_state(jax.random.PRNGKey(0),
+                       lambda k: {"x": jnp.zeros(24)}, spec, n_clients)
+    loader = QuadraticLoader(problem, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        state, met = step(state, jax.tree.map(jnp.asarray,
+                                              loader.round_batch(H)), k)
+    return state, met
+
+
+MS_KW = dict(gamma=0.01, alpha=1e-2, eta_l=0.01, eta=0.05)
+
+
+# --------------------------------------------------------------------------- #
+# differential: none-compression == pre-PR engine, bit-for-bit, all 6 methods
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("method", engine.METHODS)
+def test_none_compression_bit_identical_to_prepr_engine(problem, method):
+    """The compression layer's identity path emits the exact pre-PR program:
+    trajectories agree BITWISE with the verbatim engine snapshot."""
+    spec_new = engine.method_spec(method, **MS_KW)
+    assert spec_new.sync.compression.is_identity()
+    spec_ref = ref_engine.method_spec(method, **MS_KW)
+    st_new, met_new = _run(problem, engine.build_round_step,
+                           engine.init_state, spec_new)
+    st_ref, met_ref = _run(problem, ref_engine.build_round_step,
+                           ref_engine.init_state, spec_ref)
+    np.testing.assert_array_equal(np.asarray(st_new["params"]["x"]),
+                                  np.asarray(st_ref["params"]["x"]))
+    np.testing.assert_array_equal(np.asarray(st_new["mom"]["x"]),
+                                  np.asarray(st_ref["mom"]["x"]))
+    if "server" in st_ref:
+        np.testing.assert_array_equal(np.asarray(st_new["server"]["v"]["x"]),
+                                      np.asarray(st_ref["server"]["v"]["x"]))
+    assert float(met_new["loss"]) == float(met_ref["loss"])
+    assert "ef" not in st_new
+    assert "compression_err" not in met_new
+
+
+@pytest.mark.parametrize("op,ef", [("topk", False), ("topk", True),
+                                   ("randk", False), ("randk", True)])
+def test_identity_settings_bit_identical(problem, op, ef):
+    """topk/randk at k=dim (k=1.0) resolve to the identity and reproduce the
+    uncompressed engine trajectory bit-for-bit — with or without EF (the
+    residual would stay zero, so no ef leaf is carried)."""
+    comp = engine.CompressionSpec(op=op, k=1.0, error_feedback=ef)
+    assert comp.is_identity()
+    spec_c = engine.method_spec("savic", **MS_KW, compression=comp)
+    spec_n = engine.method_spec("savic", **MS_KW)
+    st_c, _ = _run(problem, engine.build_round_step, engine.init_state, spec_c)
+    st_n, _ = _run(problem, engine.build_round_step, engine.init_state, spec_n)
+    np.testing.assert_array_equal(np.asarray(st_c["params"]["x"]),
+                                  np.asarray(st_n["params"]["x"]))
+    assert "ef" not in st_c
+
+
+def test_operator_identity_at_full_k():
+    """The operators themselves (not just the engine short-circuit) are exact
+    at k=dim: compress_tree returns bitwise-identical leaves."""
+    key = jax.random.PRNGKey(5)
+    tree = {"a": jax.random.normal(key, (4, 13)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (4, 3, 7))}
+    for op in ("topk", "randk"):
+        out = engine.compress_tree(engine.CompressionSpec(op=op, k=1.0),
+                                   tree, jax.random.PRNGKey(9))
+        for k_ in tree:
+            np.testing.assert_array_equal(np.asarray(out[k_]),
+                                          np.asarray(tree[k_]))
+
+
+def test_int8_fused_kernel_bit_identical_to_inline(problem):
+    """use_fused_kernel=True routes int8-stochastic through the Pallas
+    quantize_update kernel; trajectories must be BITWISE equal to the inline
+    jnp path (same formula, same uniforms)."""
+    mk = lambda fused: engine.method_spec(
+        "savic", **MS_KW, compression=engine.CompressionSpec(
+            op="int8-stochastic", use_fused_kernel=fused))
+    st_a, _ = _run(problem, engine.build_round_step, engine.init_state,
+                   mk(False))
+    st_b, _ = _run(problem, engine.build_round_step, engine.init_state,
+                   mk(True))
+    np.testing.assert_array_equal(np.asarray(st_a["params"]["x"]),
+                                  np.asarray(st_b["params"]["x"]))
+
+
+# --------------------------------------------------------------------------- #
+# EF convergence: Section 5 heterogeneous quadratic
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def hetero():
+    """The Section 5 heterogeneous quadratic (thm2 benchmark family): client
+    optima differ, so per-client round deltas conflict and plain topk's bias
+    never vanishes — the canonical EF stall scenario."""
+    prob = QuadraticProblem.make(d=24, M=8, mu=0.5, L=4.0, sigma=0.1,
+                                 heterogeneity=6.0, seed=2)
+    Q = jnp.asarray(prob.Q, jnp.float32)
+    b = jnp.asarray(prob.b, jnp.float32)
+
+    def loss(params, micro):
+        x = params["x"]
+        Qm, bm = Q[micro["cid"]], b[micro["cid"]]
+        return 0.5 * (x - bm) @ Qm @ (x - bm) + micro["z"] @ x
+
+    return prob, loss
+
+
+def _run_hetero(hetero, comp, rounds=200, H=5, seed=0):
+    prob, loss = hetero
+    spec = engine.method_spec("fedavg", eta_l=0.02, compression=comp)
+    step = jax.jit(engine.build_round_step(loss, spec))
+    state = engine.init_state(jax.random.PRNGKey(0),
+                              lambda k: {"x": jnp.zeros(24)}, spec, 8)
+    loader = QuadraticLoader(prob, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    tail = []
+    for r in range(rounds):
+        key, k = jax.random.split(key)
+        state, met = step(state, jax.tree.map(jnp.asarray,
+                                              loader.round_batch(H)), k)
+        if r >= rounds - 10:
+            tail.append(float(met["loss"]))
+    return float(np.mean(tail)), state
+
+
+def test_error_feedback_fixes_topk_stall(hetero):
+    """Acceptance: plain topk (k=6/24) stalls above the uncompressed loss;
+    with the EF residual it matches the uncompressed final loss within 2%."""
+    none_loss, _ = _run_hetero(hetero, engine.CompressionSpec())
+    plain_loss, _ = _run_hetero(hetero, engine.CompressionSpec(op="topk",
+                                                               k=0.25))
+    ef_loss, ef_state = _run_hetero(hetero, engine.CompressionSpec(
+        op="topk", k=0.25, error_feedback=True))
+    assert plain_loss > none_loss * 1.05, (plain_loss, none_loss)
+    assert abs(ef_loss - none_loss) <= 0.02 * none_loss, (ef_loss, none_loss)
+    # the residual buffer is live client state: per-client, nonzero
+    assert ef_state["ef"]["x"].shape == (8, 24)
+    assert float(jnp.abs(ef_state["ef"]["x"]).max()) > 0.0
+
+
+def test_randk_ef_is_contractive_and_stable(hetero):
+    """Under EF, randk drops its dim/k unbiasedness rescale: the rescaled
+    operator is non-contractive and the residual would amplify ~(dim/k − 1)×
+    per round into NaN. Masking randk + EF must stay finite and beat plain
+    rescaled randk."""
+    # operator level: no rescale with EF -> exact-complement residual
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 50))
+    c = engine.compress_tree(
+        engine.CompressionSpec(op="randk", k=0.1, error_feedback=True),
+        {"x": x}, jax.random.PRNGKey(4))["x"]
+    kept = np.asarray(c)[np.asarray(c) != 0]
+    assert set(kept).issubset(set(np.asarray(x).ravel()))  # unscaled values
+    np.testing.assert_array_equal(np.asarray(c + (x - c)), np.asarray(x))
+    # engine level: 120 rounds stay finite and near the uncompressed loss
+    none_loss, _ = _run_hetero(hetero, engine.CompressionSpec(), rounds=120)
+    ef_loss, ef_state = _run_hetero(hetero, engine.CompressionSpec(
+        op="randk", k=0.25, error_feedback=True), rounds=120)
+    assert np.isfinite(ef_loss)
+    assert float(jnp.abs(ef_state["ef"]["x"]).max()) < 1e3
+    assert ef_loss <= none_loss * 1.10, (ef_loss, none_loss)
+
+
+def test_int8_stochastic_tracks_uncompressed(hetero):
+    """8-bit stochastic sync is unbiased and ~2⁻⁸-relative noise: final loss
+    stays within 2% of uncompressed on the same trajectory budget."""
+    none_loss, _ = _run_hetero(hetero, engine.CompressionSpec(), rounds=60)
+    int8_loss, _ = _run_hetero(hetero, engine.CompressionSpec(
+        op="int8-stochastic"), rounds=60)
+    assert abs(int8_loss - none_loss) <= 0.02 * none_loss
+
+
+# --------------------------------------------------------------------------- #
+# quantize_update kernel vs pure-jnp oracle
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("n", [17, 4096, 8 * 128 * 16, 8 * 128 * 16 + 3])
+def test_quantize_update_matches_ref(n):
+    k = jax.random.key(n)
+    x = jax.random.normal(jax.random.fold_in(k, 0), (n,)) * 3.0
+    u = jax.random.uniform(jax.random.fold_in(k, 1), (n,))
+    scale = jnp.abs(x).max() / 127.0
+    q, dec = ops.quantize_update(x, u, scale)
+    qr, decr = ref.quantize_update_ref(x, u, scale)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(decr))
+    # wire-format contract: int8 payload, decode is exactly q·scale
+    assert q.dtype == jnp.int8
+    assert int(np.abs(np.asarray(q)).max()) <= 127
+    np.testing.assert_array_equal(
+        np.asarray(dec), np.asarray(q, np.float32) * float(scale))
+
+
+def test_quantize_update_zero_scale_decodes_zero():
+    x = jnp.zeros((300,))
+    u = jax.random.uniform(jax.random.PRNGKey(0), (300,))
+    q, dec = ops.quantize_update(x, u, jnp.float32(0.0))
+    assert not np.asarray(q).any()
+    assert not np.asarray(dec).any()
+
+
+# --------------------------------------------------------------------------- #
+# property-style invariants (deterministic + hypothesis via the compat shim)
+# --------------------------------------------------------------------------- #
+
+
+def _int8_mean_over_seeds(x, n_seeds=4096):
+    spec = engine.CompressionSpec(op="int8-stochastic")
+    keys = jax.random.split(jax.random.PRNGKey(0), n_seeds)
+    dec = jax.vmap(lambda k: engine.compress_tree(spec, {"x": x[None]},
+                                                  k)["x"][0])(keys)
+    return np.asarray(dec.mean(axis=0))
+
+
+def test_int8_stochastic_is_unbiased():
+    """E[decode(encode(x))] = x: mean over seeds within a few standard errors
+    of the stochastic-rounding noise (≤ scale/2 per draw)."""
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(64,)) * 2.0,
+                    jnp.float32)
+    scale = float(jnp.abs(x).max()) / 127.0
+    mean = _int8_mean_over_seeds(x)
+    np.testing.assert_allclose(mean, np.asarray(x),
+                               atol=6 * scale / 2 / np.sqrt(4096))
+
+
+def test_randk_is_unbiased():
+    """randk rescales by dim/k so E[C(x)] = x."""
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(32,)),
+                    jnp.float32)
+    spec = engine.CompressionSpec(op="randk", k=0.25)
+    keys = jax.random.split(jax.random.PRNGKey(1), 8192)
+    dec = jax.vmap(lambda k: engine.compress_tree(spec, {"x": x[None]},
+                                                  k)["x"][0])(keys)
+    se = np.sqrt(3.0) * np.abs(np.asarray(x)) / np.sqrt(8192)
+    np.testing.assert_allclose(np.asarray(dec.mean(axis=0)), np.asarray(x),
+                               atol=float(6 * se.max() + 1e-4))
+
+
+def test_topk_ef_residual_identity():
+    """compress(x) + residual == x BITWISE for topk: the operator masks (each
+    entry is kept exactly or dropped exactly), so the EF residual is the exact
+    complement — nothing is lost between wire and buffer."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 97))
+    c = engine.compress_tree(engine.CompressionSpec(op="topk", k=0.1),
+                             {"x": x}, jax.random.PRNGKey(8))["x"]
+    residual = x - c
+    np.testing.assert_array_equal(np.asarray(c + residual), np.asarray(x))
+    # and each client kept ~k·n entries (ties may keep a few more)
+    kept = (np.asarray(c) != 0).sum(axis=1)
+    assert (kept >= 1).all() and (kept <= 0.2 * 97).all()
+
+
+def test_participation_weights_sum_to_one_under_compression():
+    """Client sampling composes with compression: the weights are unchanged
+    by the compression layer and still sum to 1; a compressed partial-
+    participation round still broadcasts one agreed point to every client."""
+    key = jax.random.PRNGKey(0)
+    for M, part in [(4, 0.5), (8, 0.25), (5, 0.3)]:
+        w = np.asarray(engine.participation_weights(
+            engine.SyncSpec(participation=part,
+                            compression=engine.CompressionSpec(op="topk",
+                                                               k=0.1)),
+            key, M))
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    prob = QuadraticProblem.make(d=24, M=4, mu=0.5, L=5.0, sigma=0.3, seed=0)
+    spec = engine.method_spec(
+        "fedavg", eta_l=0.01, participation=0.5,
+        compression=engine.CompressionSpec(op="topk", k=0.2,
+                                           error_feedback=True))
+    state, _ = _run(prob, engine.build_round_step, engine.init_state, spec)
+    p = np.asarray(state["params"]["x"])
+    np.testing.assert_array_equal(p, np.broadcast_to(p[:1], p.shape))
+
+
+@given(st.integers(min_value=1, max_value=12),
+       st.floats(min_value=0.01, max_value=1.0))
+@settings(max_examples=25, deadline=None)
+def test_participation_weights_property(M, part):
+    w = np.asarray(engine.participation_weights(
+        engine.SyncSpec(participation=part,
+                        compression=engine.CompressionSpec(op="randk",
+                                                           k=0.5)),
+        jax.random.PRNGKey(1), M))
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+
+
+@given(st.integers(min_value=1, max_value=200))
+@settings(max_examples=20, deadline=None)
+def test_topk_ef_identity_property(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 31))
+    c = engine.compress_tree(engine.CompressionSpec(op="topk", k=0.13),
+                             {"x": x}, jax.random.PRNGKey(seed + 1))["x"]
+    np.testing.assert_array_equal(np.asarray(c + (x - c)), np.asarray(x))
+
+
+@given(st.integers(min_value=0, max_value=100))
+@settings(max_examples=10, deadline=None)
+def test_int8_unbiased_property(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16,)) * 1.5
+    scale = float(jnp.abs(x).max()) / 127.0
+    mean = _int8_mean_over_seeds(x, n_seeds=2048)
+    np.testing.assert_allclose(mean, np.asarray(x),
+                               atol=8 * scale / 2 / np.sqrt(2048) + 1e-7)
+
+
+# --------------------------------------------------------------------------- #
+# spec validation (the SyncSpec/__post_init__ fix) + bytes-on-wire accounting
+# --------------------------------------------------------------------------- #
+
+
+def test_spec_validation_rejects_unknowns():
+    with pytest.raises(ValueError):
+        engine.CompressionSpec(op="gzip")
+    with pytest.raises(ValueError):
+        engine.CompressionSpec(k=0.0)
+    with pytest.raises(ValueError):
+        engine.CompressionSpec(k=1.5)
+    with pytest.raises(ValueError):
+        engine.SyncSpec(sync_dtype="float999")
+    with pytest.raises(ValueError):
+        engine.SyncSpec(participation=0.0)
+    with pytest.raises(ValueError):
+        engine.SyncSpec(participation=1.5)
+    with pytest.raises(ValueError):
+        engine.SyncSpec(compression="topk")  # must be a CompressionSpec
+    # valid settings still construct (matches ClientLoopSpec behavior)
+    engine.SyncSpec(sync_dtype="bfloat16", participation=0.5,
+                    compression=engine.CompressionSpec(op="randk", k=0.5))
+
+
+def test_bytes_on_wire_accounting():
+    params = {"x": jax.ShapeDtypeStruct((1000,), jnp.float32)}
+    fedavg = lambda **kw: engine.method_spec("fedavg", **kw)
+    assert engine.bytes_on_wire(fedavg(), params)["total_bytes"] == 4000
+    topk = engine.bytes_on_wire(
+        fedavg(compression="topk", compression_k=0.1), params)
+    assert topk["total_bytes"] == 100 * (4 + 4)      # (value, index) pairs
+    assert topk["compression_x"] == 5.0
+    int8 = engine.bytes_on_wire(
+        fedavg(compression="int8-stochastic"), params)
+    assert int8["total_bytes"] == 1000 + 4           # payload + scale
+    # momentum rides uncompressed under an averaging server (savic default)
+    savic_bf16 = engine.bytes_on_wire(
+        engine.method_spec("savic", sync_dtype="bfloat16"), params)
+    assert savic_bf16["momentum_bytes"] == 2000
+    assert savic_bf16["total_bytes"] == 4000
+
+
+# --------------------------------------------------------------------------- #
+# launch layer: EF leaf threading through build_train_step shardings
+# --------------------------------------------------------------------------- #
+
+
+def test_build_train_step_threads_compression_and_ef_sharding():
+    from jax.sharding import Mesh
+
+    from repro.configs import ShapeConfig
+    from repro.launch.steps import build_train_step
+
+    dev = np.array(jax.devices("cpu")[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    shape = ShapeConfig("tiny_train", 32, 2, "train")
+    comp = engine.CompressionSpec(op="topk", k=0.1, error_feedback=True)
+    built = build_train_step("qwen2-0.5b", shape, mesh, method="fedadam",
+                             reduced=True, h_local=2, compression=comp)
+    assert built.meta["engine_spec"].sync.compression == comp
+    state_shape = built.args[0]
+    assert "ef" in state_shape
+    p0 = jax.tree.leaves(state_shape["params"])[0]
+    e0 = jax.tree.leaves(state_shape["ef"])[0]
+    assert e0.shape == p0.shape           # per-client: leading M dim
+    state_spec, _ = built.in_shardings
+    # ef sharded exactly like params (DESIGN.md §2/§4)
+    assert jax.tree.structure(state_spec["ef"]) \
+        == jax.tree.structure(state_shape["ef"])
+    assert str(jax.tree.leaves(state_spec["ef"])[0]) \
+        == str(jax.tree.leaves(state_spec["params"])[0])
