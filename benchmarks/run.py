@@ -18,6 +18,9 @@ under results/bench/.
   compression bytes-on-wire per round × wall-time for every sync compression
               operator (none/topk/randk/int8-stochastic, ±error feedback) on
               a method slice; writes BENCH_compression.json at the repo root.
+  async       simulated wall-clock sync vs staleness-buffered async under the
+              lognormal-straggler systems model for every method (simulated
+              round time + time-to-loss); writes BENCH_async.json.
   comm        communication volume per round: SAVIC sync vs per-step DDP
               (analytic, from param counts) + measured collective bytes from
               dry-run artifacts when present.
@@ -412,6 +415,132 @@ def bench_compression(rounds=10, H=4, M=8, seed=0):
 
 
 # --------------------------------------------------------------------------- #
+# async — simulated wall-clock sync vs async under systems heterogeneity
+#         -> BENCH_async.json
+# --------------------------------------------------------------------------- #
+
+
+ASYNC_BENCH_BUFFER = 4       # staleness budget B for the async arm
+ASYNC_BENCH_SIGMA = 0.8      # lognormal straggler sigma
+
+
+def bench_async(rounds=30, H=6, M=8, seed=0):
+    """Sync barrier vs staleness-buffered async for every engine method under
+    the lognormal-straggler systems model (DESIGN.md §5).
+
+    The sync arm runs uniform H for ``rounds`` rounds with the server waiting
+    for the slowest client (simulated round time max_m t_m·H). The async arm
+    gives stragglers a budgeted H_m (fewer local steps) and a B-round
+    staleness buffer, so the simulated server period is max_m(t_m·H_m)/B —
+    and it gets 4·rounds rounds, matching the B=4 staleness budget (its
+    simulated rounds are ~B× shorter, so both arms spend comparable simulated
+    time). Adaptive servers get a staleness-scaled-down η in the async arm
+    (the FedBuff discipline: a lagged pseudo-gradient through an adaptive
+    normalizer needs a smaller server step or it oscillates divergently —
+    measured here, η=0.1 FedAdam ends 90× above init under B=4 lag). Both
+    arms race the simulated clock to a shared target loss (55% of the sync
+    arm's round-0 loss); writes BENCH_async.json at the repo root to seed the
+    async-speedup trajectory.
+    """
+    from repro.core import engine
+    from repro.data import ClassificationData, main_class_partition
+    from repro.data.federated import (local_steps_from_times,
+                                      sample_step_times, simulated_round_time)
+
+    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
+    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
+    step_times = sample_step_times("lognormal", M, seed=seed,
+                                   sigma=ASYNC_BENCH_SIGMA)
+    h_m = tuple(int(h) for h in local_steps_from_times(step_times, H))
+    sim_t = {
+        "sync": simulated_round_time(step_times, [H] * M, barrier="sync"),
+        "async": simulated_round_time(step_times, h_m, barrier="async",
+                                      buffer_rounds=ASYNC_BENCH_BUFFER),
+    }
+    arms = {
+        "sync": dict(),
+        "async": dict(local_steps=h_m,
+                      asynchrony=engine.AsyncSpec(
+                          buffer_rounds=ASYNC_BENCH_BUFFER,
+                          weighting="polynomial")),
+    }
+    arm_rounds = {"sync": rounds, "async": ASYNC_BENCH_BUFFER * rounds}
+    overrides = {"local-adam": dict(eta_l=0.005, eta=0.02)}
+    # staleness-scaled server lr for the async arm (see docstring)
+    async_overrides = {"fedadagrad": dict(eta=0.025),
+                       "fedadam": dict(eta=0.015),
+                       "fedyogi": dict(eta=0.015),
+                       "local-adam": dict(eta=0.005)}
+    rows, out = [], []
+    entries = {}
+    from repro.data import FederatedLoader
+    for method in ENGINE_BENCH_METHODS:
+        entries[method] = {}
+        target = None
+        for arm, arm_kw in arms.items():
+            init, loss, _ = _mlp(data.x.shape[1], 10)
+            kw = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
+            kw.update(overrides.get(method, {}))
+            if arm == "async":
+                kw.update(async_overrides.get(method, {}))
+            spec = engine.method_spec(method, **kw, **arm_kw)
+            step = jax.jit(engine.build_round_step(loss, spec))
+            state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
+            loader = FederatedLoader(data.x, data.y.astype(np.int32),
+                                     parts[:M], batch_size=32, seed=seed)
+            key = jax.random.PRNGKey(seed + 1)
+            times, losses = [], []
+            for _ in range(arm_rounds[arm]):
+                key, k = jax.random.split(key)
+                batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
+                t0 = time.perf_counter()
+                state, met = step(state, batch, k)
+                jax.block_until_ready(state)
+                times.append((time.perf_counter() - t0) * 1e3)
+                losses.append(float(met["loss"]))
+            if target is None:
+                target = losses[0] * 0.55   # shared, reachable by both arms
+            r_hit = next((r + 1 for r, l in enumerate(losses) if l <= target),
+                         -1)
+            rec = {
+                "sim_round_time": round(sim_t[arm], 4),
+                "round_ms_mean": round(float(np.mean(times[1:])), 3),
+                "rounds": arm_rounds[arm],
+                "final_loss": round(losses[-1], 4),
+                "target_loss": round(target, 4),
+                "rounds_to_target": r_hit,
+                "sim_time_to_target": round(r_hit * sim_t[arm], 4)
+                if r_hit > 0 else -1.0,
+            }
+            entries[method][arm] = rec
+            rows.append({"method": method, "arm": arm, **rec})
+        s, a = entries[method]["sync"], entries[method]["async"]
+        if s["sim_time_to_target"] > 0 and a["sim_time_to_target"] > 0:
+            out.append(("async",
+                        f"sim_speedup_{method.replace('-', '_')}",
+                        round(s["sim_time_to_target"]
+                              / a["sim_time_to_target"], 2)))
+        out.append(("async", f"final_loss_async_{method.replace('-', '_')}",
+                    a["final_loss"]))
+    path_json = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_async.json")
+    with open(path_json, "w") as f:
+        json.dump({"bench": "async_simulated_walltime",
+                   "config": {"model": "mlp_cls_reduced", "clients": M,
+                              "h_local": H, "rounds": rounds,
+                              "het_model": "lognormal",
+                              "sigma": ASYNC_BENCH_SIGMA,
+                              "step_times": [round(float(t), 4)
+                                             for t in step_times],
+                              "local_steps_async": list(h_m),
+                              "buffer_rounds": ASYNC_BENCH_BUFFER,
+                              "staleness_weight": "polynomial",
+                              "backend": jax.default_backend()},
+                   "methods": entries}, f, indent=1)
+    return out, _emit(rows, "async")
+
+
+# --------------------------------------------------------------------------- #
 # comm — communication volume per round
 # --------------------------------------------------------------------------- #
 
@@ -502,6 +631,7 @@ BENCHES = {
     "sec52": bench_sec52,
     "engine": bench_engine,
     "compression": bench_compression,
+    "async": bench_async,
     "comm": bench_comm,
     "kernels": bench_kernels,
 }

@@ -4,6 +4,16 @@ classification with the main-class partitioning protocol (30/50/70%).
 
   PYTHONPATH=src python examples/federated_heterogeneity.py [--frac 0.5]
 
+Beyond the paper, ``--het-model`` adds SYSTEMS heterogeneity on top of the
+statistical kind (DESIGN.md §5): per-client step times drawn from a
+lognormal-straggler or device-tier model, the budgeted per-client local-step
+vector H_m (stragglers do fewer local steps instead of stretching the
+barrier), and optionally ``--async-buffer B`` for the staleness-buffered
+server:
+
+  PYTHONPATH=src python examples/federated_heterogeneity.py \
+      --het-model lognormal --async-buffer 4
+
 CIFAR-10/ResNet18 of the paper is replaced by a synthetic same-shape image
 dataset + MLP (no downloads in this container); the partitioning protocol,
 client count (10), momentum (0.9), scaling momentum (0.999) follow the paper.
@@ -15,14 +25,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PrecondConfig, SavicConfig, savic
+from repro.core import AsyncSpec, PrecondConfig, SavicConfig, savic
 from repro.data import (ClassificationData, FederatedLoader,
                         heterogeneity_score, main_class_partition)
+from repro.data.federated import (SYSTEMS_MODELS, local_steps_from_times,
+                                  sample_step_times, simulated_round_time)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--frac", type=float, default=0.5)
 ap.add_argument("--rounds", type=int, default=20)
 ap.add_argument("--h-local", type=int, default=6)
+ap.add_argument("--het-model", default="uniform", choices=list(SYSTEMS_MODELS),
+                help="systems-heterogeneity model for per-client H_m")
+ap.add_argument("--het-sigma", type=float, default=0.6)
+ap.add_argument("--async-buffer", type=int, default=0,
+                help="server staleness buffer depth B (0 = synchronous)")
 args = ap.parse_args()
 
 data = ClassificationData.make(n=8000, n_classes=10, seed=0)
@@ -30,6 +47,20 @@ xte, yte = jnp.asarray(data.x[-1000:]), jnp.asarray(data.y[-1000:])
 parts = main_class_partition(data.y[:-1000], 10, args.frac, seed=0)
 print(f"main-class fraction {args.frac}: heterogeneity score "
       f"{heterogeneity_score(data.y[:-1000], parts):.3f}")
+
+local_steps = None
+asy = AsyncSpec(buffer_rounds=args.async_buffer)
+step_times = sample_step_times(args.het_model, 10, seed=0,
+                               sigma=args.het_sigma)
+if args.het_model != "uniform":
+    local_steps = tuple(int(h) for h in
+                        local_steps_from_times(step_times, args.h_local))
+    t_sync = simulated_round_time(step_times, [args.h_local] * 10)
+    t_here = simulated_round_time(step_times, local_steps, barrier="async",
+                                  buffer_rounds=args.async_buffer) \
+        if args.async_buffer else simulated_round_time(step_times, local_steps)
+    print(f"systems model {args.het_model}: H_m={list(local_steps)} "
+          f"simulated round time {t_here:.2f} vs uniform-sync {t_sync:.2f}")
 
 D = data.x.shape[1]
 
@@ -65,7 +96,8 @@ METHODS = {"SGD": ("identity", "global"),
 rows = []
 for name, (kind, scaling) in METHODS.items():
     pc = PrecondConfig(kind=kind, alpha=1e-2, beta2=0.999)
-    sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling)
+    sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling,
+                     local_steps=local_steps, asynchrony=asy)
     step = jax.jit(savic.build_round_step(loss, pc, sv))
     state = savic.init_state(jax.random.PRNGKey(0), init, pc, sv, 10)
     loader = FederatedLoader(data.x[:-1000], data.y[:-1000].astype(np.int32),

@@ -25,11 +25,17 @@ leading client dim M sharded over the plan's client axes; the global D and the
 adaptive server's (m, v) are client-replicated (no M dim). The state pytree is
 
     {"params": (M, ...), "mom": (M, ...), "precond": {...}, "round": i32,
-     ["server": {"m": (...), "v": (...)}], ["ef": (M, ...)]}
+     ["server": {"m": (...), "v": (...)}], ["ef": (M, ...)],
+     ["buffer": (B, ...)]}
 
-with the ``server`` entry present only for adaptive-server methods and the
+with the ``server`` entry present only for adaptive-server methods, the
 ``ef`` error-feedback residual (per-client, shaped like ``params``) present
-only when the sync compression carries a residual (DESIGN.md §4).
+only when the sync compression carries a residual (DESIGN.md §4), and the
+``buffer`` staleness FIFO (single-replica shaped, leading B dim) present only
+for a staleness-buffered server (``AsyncSpec``, DESIGN.md §5). The ClientLoop
+additionally supports a per-client local-step vector H_m
+(``ClientLoopSpec.local_steps``), realized as masking inside the same
+scan×vmap program.
 
 ``core/savic.py`` and ``core/fedopt.py`` are thin method definitions over this
 engine; new methods are a ~50-line preset (see ``method_spec``).
@@ -53,7 +59,16 @@ from repro.core.preconditioner import PrecondConfig
 
 @dataclasses.dataclass(frozen=True)
 class ClientLoopSpec:
-    """H local steps per client: x ← x − lr·D̂⁻¹m,  m ← momentum·m + g."""
+    """H local steps per client: x ← x − lr·D̂⁻¹m,  m ← momentum·m + g.
+
+    ``local_steps`` is the per-client local-step vector H_m (systems
+    heterogeneity, DESIGN.md §5): client m performs ``local_steps[m]`` of the
+    round's H microbatch steps and then idles at the sync barrier. Implemented
+    as masking inside the scan-over-H × vmap-over-M program — one jit'd
+    computation regardless of how ragged H_m is. ``None`` (or all entries
+    equal to the batch's H) is the uniform regime and emits the exact
+    pre-heterogeneity program.
+    """
     lr: float = 0.1                # local step size (γ of Alg. 1, η_l of [42])
     momentum: float = 0.0          # heavy-ball β₁ on the client
     scaling: str = "global"        # "global" (D̂ updated at sync) | "local"
@@ -64,10 +79,17 @@ class ClientLoopSpec:
     grad_clip: float = 0.0         # global-norm clip per local step (0 = off)
     use_fused_kernel: bool = False # Pallas scaled_update kernel (TPU)
     reset_momentum: bool = False   # zero m at round start (FedOpt clients)
+    local_steps: Optional[tuple] = None  # per-client H_m (None = uniform H)
 
     def __post_init__(self):
         if self.scaling not in ("global", "local"):
             raise ValueError(self.scaling)
+        if self.local_steps is not None:
+            hs = tuple(int(h) for h in self.local_steps)
+            if not hs or any(h < 1 for h in hs):
+                raise ValueError(f"local_steps must be a non-empty tuple of "
+                                 f"ints >= 1, got {self.local_steps!r}")
+            object.__setattr__(self, "local_steps", hs)
 
 
 COMPRESSION_OPS = ("none", "topk", "randk", "int8-stochastic")
@@ -117,14 +139,63 @@ class CompressionSpec:
                                      and self.k >= 1.0)
 
 
+STALENESS_WEIGHTINGS = ("constant", "polynomial")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncSpec:
+    """FedBuff-style server staleness buffer (DESIGN.md §5).
+
+    With ``buffer_rounds = B > 0`` the server keeps a delta FIFO
+    ``state["buffer"]`` of the last B participation-weighted round deltas
+    Δ̄(t), Δ̄(t−1), …, Δ̄(t−B+1) (single-replica shaped, leading B dim, sharded
+    like one replica's params). Each round the freshly aggregated delta is
+    enqueued and the server applies the staleness-weighted combination
+
+        Δ_applied(t) = Σ_τ w_τ · Δ̄(t−τ),   w_τ ∝ s(τ)·[t ≥ τ],  Σ_τ w_τ = 1
+
+    with s(τ) = 1 (``constant``) or (1+τ)^-poly_a (``polynomial``,
+    cf. FedBuff / arXiv:2106.06639's staleness scaling). Because every delta
+    transits each slot exactly once, its total applied mass is 1 — the buffer
+    is a staleness-weighted smoothing of the update stream, which is what a
+    lag-τ asynchronous server pace simulates in a single-program round loop.
+
+    ``buffer_rounds = 0`` is fully synchronous and emits the exact
+    pre-buffer program (identity short-circuit, same discipline as
+    ``CompressionSpec.is_identity``). B = 1 holds only fresh deltas
+    (staleness 0) and reduces to plain delta averaging.
+    """
+    buffer_rounds: int = 0         # B; 0 = fully synchronous (identity)
+    weighting: str = "constant"    # staleness weight s(τ)
+    poly_a: float = 0.5            # exponent for the polynomial weighting
+
+    def __post_init__(self):
+        if int(self.buffer_rounds) != self.buffer_rounds \
+                or self.buffer_rounds < 0:
+            raise ValueError(f"buffer_rounds={self.buffer_rounds}; expected "
+                             f"an int >= 0")
+        object.__setattr__(self, "buffer_rounds", int(self.buffer_rounds))
+        if self.weighting not in STALENESS_WEIGHTINGS:
+            raise ValueError(f"staleness weighting {self.weighting!r}; "
+                             f"expected one of {STALENESS_WEIGHTINGS}")
+        if self.poly_a <= 0.0:
+            raise ValueError(f"poly_a={self.poly_a}; expected > 0")
+
+    def is_identity(self) -> bool:
+        """True iff no buffering happens: the engine emits the bit-exact
+        synchronous program and carries no ``buffer`` leaf."""
+        return self.buffer_rounds == 0
+
+
 @dataclasses.dataclass(frozen=True)
 class SyncSpec:
-    """The weighted, optionally quantized/compressed, optionally partial sync
-    average."""
+    """The weighted, optionally quantized/compressed, optionally partial,
+    optionally staleness-buffered sync average."""
     participation: float = 1.0     # fraction of clients entering the average
     sync_dtype: str = ""           # all-reduce dtype ("" = full precision)
     average_momentum: bool = True  # also average momentum buffers at sync
     compression: CompressionSpec = CompressionSpec()
+    asynchrony: AsyncSpec = AsyncSpec()
 
     def __post_init__(self):
         if not 0.0 < self.participation <= 1.0:
@@ -139,6 +210,9 @@ class SyncSpec:
         if not isinstance(self.compression, CompressionSpec):
             raise ValueError(f"compression must be a CompressionSpec, got "
                              f"{type(self.compression).__name__}")
+        if not isinstance(self.asynchrony, AsyncSpec):
+            raise ValueError(f"asynchrony must be an AsyncSpec, got "
+                             f"{type(self.asynchrony).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,6 +257,9 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
                 participation: float = 1.0, sync_dtype: str = "",
                 compression="none", compression_k: float = 1.0,
                 error_feedback: bool = False,
+                local_steps: Optional[tuple] = None,
+                asynchrony=None, async_buffer: int = 0,
+                staleness_weight: str = "constant",
                 use_fused_kernel: bool = False) -> EngineSpec:
     """Canonical EngineSpec for each named method.
 
@@ -202,13 +279,20 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
     compressed-Local-Adam scenario family. ``use_fused_kernel`` enables both
     fused Pallas kernels: the client-loop ``scaled_update`` and (for
     int8-stochastic) the sync ``quantize_update``.
+
+    ``local_steps`` (per-client H_m) and ``asynchrony`` (an AsyncSpec; or the
+    ``async_buffer``/``staleness_weight`` shorthand) are engine-level too:
+    every method runs under systems heterogeneity and a staleness-buffered
+    server (DESIGN.md §5).
     """
     comp = compression if isinstance(compression, CompressionSpec) \
         else CompressionSpec(op=compression, k=compression_k,
                              error_feedback=error_feedback,
                              use_fused_kernel=use_fused_kernel)
+    asy = asynchrony if isinstance(asynchrony, AsyncSpec) \
+        else AsyncSpec(buffer_rounds=async_buffer, weighting=staleness_weight)
     sync = SyncSpec(participation=participation, sync_dtype=sync_dtype,
-                    compression=comp)
+                    compression=comp, asynchrony=asy)
     if method == "savic":
         # one source of truth for the SAVIC composition: SavicConfig ->
         # engine_spec in core/savic.py (lazy import; savic imports engine)
@@ -218,18 +302,21 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
             SavicConfig(gamma=gamma, beta1=beta1, scaling=scaling,
                         use_fused_kernel=use_fused_kernel,
                         participation=participation, sync_dtype=sync_dtype,
-                        compression=comp))
+                        compression=comp, local_steps=local_steps,
+                        asynchrony=asy))
     if method == "fedavg":
         # plain Local SGD clients (no momentum), plain average — textbook
         # FedAvg; heavy-ball local SGD is savic with pc_kind="identity"
         return EngineSpec(
-            client=ClientLoopSpec(lr=eta_l, momentum=0.0),
+            client=ClientLoopSpec(lr=eta_l, momentum=0.0,
+                                  local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="average"),
             precond=PrecondConfig(kind="identity"))
     if method in ("fedadagrad", "fedadam", "fedyogi"):
         return EngineSpec(
-            client=ClientLoopSpec(lr=eta_l, momentum=0.0, reset_momentum=True),
+            client=ClientLoopSpec(lr=eta_l, momentum=0.0, reset_momentum=True,
+                                  local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="adaptive", opt=method[3:], eta=eta,
                               beta1=server_beta1, beta2=server_beta2, tau=tau,
@@ -238,7 +325,8 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
     if method == "local-adam":
         return EngineSpec(
             client=ClientLoopSpec(lr=eta_l, momentum=beta1, scaling="local",
-                                  use_fused_kernel=use_fused_kernel),
+                                  use_fused_kernel=use_fused_kernel,
+                                  local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="adaptive", opt="adam", eta=eta,
                               beta1=server_beta1, beta2=server_beta2, tau=tau,
@@ -283,6 +371,13 @@ def init_state(key, init_params_fn, spec: EngineSpec, n_clients: int):
         # Identity compression drops nothing, so the leaf would stay zero —
         # omitted to keep the state pytree (and program) bit-identical.
         state["ef"] = jax.tree.map(jnp.zeros_like, params_m)
+    asy = spec.sync.asynchrony
+    if not asy.is_identity():
+        # staleness delta FIFO: single-replica shaped, leading B dim, sharded
+        # like one replica's params (DESIGN.md §5) — server state, like m/v
+        state["buffer"] = jax.tree.map(
+            lambda p: jnp.zeros((asy.buffer_rounds,) + p.shape, p.dtype),
+            params)
     return state
 
 
@@ -356,27 +451,69 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec):
     global_d = cl.scaling == "global"
 
     def run(params_m, mom_m, pstate, micro, keys):
+        H = jax.tree.leaves(micro)[0].shape[0]
+        M = jax.tree.leaves(params_m)[0].shape[0]
+        masked = _needs_masking(cl, H, M)
+
         def scan_body(carry, xs):
-            params_m, mom_m, pstate, _ = carry
-            micro_m, ks = xs  # (M, ...) microbatch slice, (M,) keys
+            params_m, mom_m, pstate, grads_c = carry
+            if masked:
+                micro_m, ks, h_idx = xs
+                active = h_idx < jnp.asarray(cl.local_steps, jnp.int32)  # (M,)
+            else:
+                micro_m, ks = xs  # (M, ...) microbatch slice, (M,) keys
             if global_d:
                 fn = lambda p, m, mc, k: local_step_one_client(
                     p, m, pstate, mc, k)
-                params_m, mom_m, _, losses, grads = jax.vmap(fn)(
+                new_params, new_mom, _, losses, grads = jax.vmap(fn)(
                     params_m, mom_m, micro_m, ks)
                 new_pstate = pstate
             else:
                 fn = local_step_one_client
-                params_m, mom_m, new_pstate, losses, grads = jax.vmap(fn)(
+                new_params, new_mom, new_pstate, losses, grads = jax.vmap(fn)(
                     params_m, mom_m, pstate, micro_m, ks)
-            return (params_m, mom_m, new_pstate, grads), losses
+            if masked:
+                # heterogeneous H_m: clients past their budget freeze —
+                # params/mom/grads (and per-client D) keep their step-H_m
+                # values, so x_{m,H} = x_{m,H_m} at the sync barrier
+                sel = lambda n, o: jax.tree.map(
+                    lambda a, b: jnp.where(
+                        active.reshape((M,) + (1,) * (a.ndim - 1)), a, b),
+                    n, o)
+                new_params = sel(new_params, params_m)
+                new_mom = sel(new_mom, mom_m)
+                grads = sel(grads, grads_c)
+                if not global_d:
+                    new_pstate = sel(new_pstate, pstate)
+            return (new_params, new_mom, new_pstate, grads), losses
 
         grads0 = jax.tree.map(jnp.zeros_like, params_m)
+        xs = (micro, keys, jnp.arange(H, dtype=jnp.int32)) if masked \
+            else (micro, keys)
         (params_m, mom_m, pstate, last_grads), losses = jax.lax.scan(
-            scan_body, (params_m, mom_m, pstate, grads0), (micro, keys))
+            scan_body, (params_m, mom_m, pstate, grads0), xs)
         return params_m, mom_m, pstate, last_grads, losses
 
     return local_step_one_client, run
+
+
+def _needs_masking(cl: ClientLoopSpec, H: int, M: int) -> bool:
+    """True iff the per-client H_m vector actually truncates some client.
+
+    Uniform H_m == H (or ``local_steps=None``) short-circuits to the exact
+    pre-heterogeneity program — the bit-for-bit contract of DESIGN.md §5,
+    pinned by tests/test_heterogeneity.py. Shape errors are raised at trace
+    time, where H and M are static.
+    """
+    hs = cl.local_steps
+    if hs is None:
+        return False
+    if len(hs) != M:
+        raise ValueError(f"local_steps has {len(hs)} entries for {M} clients")
+    if max(hs) > H:
+        raise ValueError(f"local_steps max {max(hs)} exceeds the round's "
+                         f"H={H} microbatches")
+    return any(h != H for h in hs)
 
 
 # --------------------------------------------------------------------------- #
@@ -470,6 +607,23 @@ def bytes_on_wire(spec: EngineSpec, params) -> dict:
 # --------------------------------------------------------------------------- #
 # SyncStrategy
 # --------------------------------------------------------------------------- #
+
+
+def staleness_weights(spec: AsyncSpec, round_idx):
+    """Normalized weights over the delta FIFO's B slots (ages τ = 0..B−1).
+
+    w_τ ∝ s(τ)·[round_idx ≥ τ]: slot τ holds the delta aggregated τ rounds
+    ago, which does not exist before round τ (the buffer starts zeroed), so
+    early rounds renormalize over the populated prefix. Weights always sum to
+    1 (pinned in tests/test_heterogeneity.py); with B = 1 the single fresh
+    slot gets weight 1 — plain delta averaging.
+    """
+    B = spec.buffer_rounds
+    ages = jnp.arange(B, dtype=jnp.float32)
+    s = jnp.ones((B,)) if spec.weighting == "constant" \
+        else (1.0 + ages) ** (-spec.poly_a)
+    w = s * (ages <= round_idx)
+    return w / jnp.maximum(w.sum(), jnp.finfo(jnp.float32).tiny)
 
 
 def participation_weights(spec: SyncSpec, key, n_clients: int):
@@ -579,25 +733,43 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec):
 
         # ---- SyncStrategy: the only cross-client traffic per round ---------
         avg = make_sync(sy, key, M)
-        comp = sy.compression
-        new_ef = delta_avg = comp_err = None
-        if comp.is_identity():
-            # bit-for-bit the uncompressed program (DESIGN.md §4 contract) —
-            # no delta reconstruction, no residual state
+        comp, asy = sy.compression, sy.asynchrony
+        new_ef = delta_avg = comp_err = new_buffer = staleness = None
+        if comp.is_identity() and asy.is_identity():
+            # bit-for-bit the uncompressed synchronous program (DESIGN.md
+            # §4/§5 contract) — no delta reconstruction, no residual/buffer
+            # state
             params_avg = jax.tree.map(avg, params_m)
         else:
-            # compress the round delta Δ_m = x_{m,H} − x_t (clients start each
-            # round at the common broadcast point, so x_t = params[0])
+            # delta form: Δ_m = x_{m,H} − x_t (clients start each round at
+            # the common broadcast point, so x_t = params[0])
             x_ref = jax.tree.map(lambda p: p[0], state["params"])
             u_m = jax.tree.map(lambda p, x: p - x[None], params_m, x_ref)
-            if comp.error_feedback:
-                u_m = jax.tree.map(jnp.add, u_m, state["ef"])
-            c_m = compress_tree(comp, u_m, key)
-            if comp.error_feedback:
-                new_ef = jax.tree.map(jnp.subtract, u_m, c_m)
-            comp_err = sum(jnp.vdot(u - c, u - c).real for u, c in zip(
-                jax.tree.leaves(u_m), jax.tree.leaves(c_m)))
+            if comp.is_identity():
+                c_m = u_m
+            else:
+                if comp.error_feedback:
+                    u_m = jax.tree.map(jnp.add, u_m, state["ef"])
+                c_m = compress_tree(comp, u_m, key)
+                if comp.error_feedback:
+                    new_ef = jax.tree.map(jnp.subtract, u_m, c_m)
+                comp_err = sum(jnp.vdot(u - c, u - c).real for u, c in zip(
+                    jax.tree.leaves(u_m), jax.tree.leaves(c_m)))
             delta_avg = jax.tree.map(avg, c_m)
+            if not asy.is_identity():
+                # FedBuff-style staleness buffer (DESIGN.md §5): enqueue the
+                # fresh aggregated delta, apply the staleness-weighted
+                # combination of the FIFO
+                w = staleness_weights(asy, state["round"])
+                new_buffer = jax.tree.map(
+                    lambda b, d: jnp.concatenate(
+                        [d[None].astype(b.dtype), b[:-1]], axis=0),
+                    state["buffer"], delta_avg)
+                delta_avg = jax.tree.map(
+                    lambda b: jnp.tensordot(w.astype(b.dtype), b, axes=1),
+                    new_buffer)
+                staleness = jnp.sum(
+                    w * jnp.arange(asy.buffer_rounds, dtype=jnp.float32))
             params_avg = jax.tree.map(
                 lambda x, d: x + d.astype(x.dtype), x_ref, delta_avg)
 
@@ -635,18 +807,34 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec):
                 stat = jax.tree.map(lambda s: s.mean(axis=0), stats)
             pstate = PC.update(pc, pstate, stat)
 
+        if _needs_masking(cl, H, M):
+            # heterogeneous H_m: steps past a client's budget froze its state;
+            # average only the executed steps, and report each client's loss
+            # at ITS final step H_m−1, not the global step H−1
+            h_m = jnp.asarray(cl.local_steps, jnp.int32)
+            act = jnp.arange(H, dtype=jnp.int32)[:, None] < h_m[None, :]
+            loss_mean = jnp.sum(losses * act) / jnp.sum(act)
+            loss_per_client = jnp.take_along_axis(
+                losses, (h_m - 1)[None, :], axis=0)[0]
+        else:
+            loss_mean = losses.mean()
+            loss_per_client = losses[-1]
         metrics = {
-            "loss": losses.mean(),
-            "loss_per_client": losses[-1],
+            "loss": loss_mean,
+            "loss_per_client": loss_per_client,
             "client_drift": drift_pre_sync,
         }
         if comp_err is not None:
             metrics["compression_err"] = comp_err  # Σ‖u_m − C(u_m)‖²
+        if staleness is not None:
+            metrics["staleness"] = staleness  # E_w[τ] of the applied delta
 
         # ---- ServerUpdate ---------------------------------------------------
         new_state = {"round": state["round"] + 1, "precond": pstate}
         if new_ef is not None:
             new_state["ef"] = new_ef
+        if new_buffer is not None:
+            new_state["buffer"] = new_buffer
         if sv.kind == "adaptive":
             x_prev = jax.tree.map(lambda p: p[0], state["params"])
             if delta_avg is not None:

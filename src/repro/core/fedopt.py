@@ -43,13 +43,19 @@ class FedOptConfig:
     tau: float = 1e-3              # adaptivity floor τ
     v_init: float = None           # v_{-1}; default τ² (the paper's pain point)
     client_momentum: float = 0.0
+    # per-client local-step vector H_m (systems heterogeneity, DESIGN.md §5).
+    # The staleness buffer is spec'd at the engine level only: this module's
+    # historical single-replica state layout has no buffer slot — use
+    # engine.method_spec(..., async_buffer=) for buffered FedOpt.
+    local_steps: tuple = None
 
 
 def engine_spec(cfg: FedOptConfig) -> engine.EngineSpec:
     """FedOptConfig -> the engine's three-layer spec."""
     spec = engine.method_spec(
         "fed" + cfg.server_opt, eta=cfg.eta, eta_l=cfg.eta_l, tau=cfg.tau,
-        server_beta1=cfg.beta1, server_beta2=cfg.beta2, v_init=cfg.v_init)
+        server_beta1=cfg.beta1, server_beta2=cfg.beta2, v_init=cfg.v_init,
+        local_steps=cfg.local_steps)
     if cfg.client_momentum:
         spec = dataclasses.replace(spec, client=dataclasses.replace(
             spec.client, momentum=cfg.client_momentum))

@@ -45,6 +45,11 @@ class SavicConfig:
     # sync delta compression (topk/randk/int8-stochastic, optional EF
     # residual; engine SyncStrategy layer, DESIGN.md §4)
     compression: engine.CompressionSpec = engine.CompressionSpec()
+    # systems heterogeneity: per-client local-step vector H_m (None = uniform;
+    # engine ClientLoop masking, DESIGN.md §5)
+    local_steps: tuple = None
+    # staleness-buffered server (FedBuff-style delta FIFO, DESIGN.md §5)
+    asynchrony: engine.AsyncSpec = engine.AsyncSpec()
 
 
 def engine_spec(pc_cfg: PrecondConfig, sv_cfg: SavicConfig) -> engine.EngineSpec:
@@ -54,11 +59,13 @@ def engine_spec(pc_cfg: PrecondConfig, sv_cfg: SavicConfig) -> engine.EngineSpec
             lr=sv_cfg.gamma, momentum=sv_cfg.beta1, scaling=sv_cfg.scaling,
             stat_source=sv_cfg.stat_source, weight_decay=sv_cfg.weight_decay,
             grad_clip=sv_cfg.grad_clip,
-            use_fused_kernel=sv_cfg.use_fused_kernel),
+            use_fused_kernel=sv_cfg.use_fused_kernel,
+            local_steps=sv_cfg.local_steps),
         sync=engine.SyncSpec(
             participation=sv_cfg.participation, sync_dtype=sv_cfg.sync_dtype,
             average_momentum=sv_cfg.average_momentum,
-            compression=sv_cfg.compression),
+            compression=sv_cfg.compression,
+            asynchrony=sv_cfg.asynchrony),
         server=engine.ServerSpec(kind="average"),
         precond=pc_cfg)
 

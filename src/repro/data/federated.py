@@ -1,16 +1,34 @@
-"""Heterogeneous client partitioning — the paper's §6.1 protocol.
+"""Heterogeneous client partitioning — the paper's §6.1 protocol — plus
+systems-heterogeneity models for the round engine (DESIGN.md §5).
 
-"To realize the heterogeneity of the data for each of the clients we select a
-'main' class ... choose 30%, 50%, or 70% of the 'main' class for the
-corresponding client and add the rest data evenly from the remaining samples."
+Statistical heterogeneity ("To realize the heterogeneity of the data for each
+of the clients we select a 'main' class ... choose 30%, 50%, or 70% of the
+'main' class for the corresponding client and add the rest data evenly from
+the remaining samples."): implemented exactly (main-class fraction
+partitioner) plus the standard Dirichlet(α) partitioner as an extra
+heterogeneity model, and an iid partitioner for the identical-data regime of
+Theorem 1.
 
-Implements that exactly (main-class fraction partitioner) plus the standard
-Dirichlet(α) partitioner as an extra heterogeneity model, and an iid
-partitioner for the identical-data regime of Theorem 1.
+Systems heterogeneity (cf. the local-update regimes of arXiv:2409.13155 and
+the adaptive-workload line of arXiv:2406.13936, Lau et al.): per-client relative
+step times drawn from one of three models —
+
+  uniform     every client identical (step time 1.0; H_m = H)
+  lognormal   step time ~ LogNormal(0, sigma), normalized so the FASTEST
+              client is 1.0 — the classic long-tailed straggler draw
+  tiers       device classes (e.g. 1×/2×/4× step time) with given occupation
+              probabilities — fleet-of-device-generations heterogeneity
+
+plus the derived per-client local-step vector H_m (fixed wall-clock budget:
+the slow clients do fewer local steps) and the simulated round-time model
+used by `benchmarks/run.py --only async` (sync barrier = slowest client;
+a B-round staleness budget divides the effective barrier by B).
 """
 from __future__ import annotations
 
 import numpy as np
+
+SYSTEMS_MODELS = ("uniform", "lognormal", "tiers")
 
 
 def main_class_partition(labels: np.ndarray, n_clients: int, main_frac: float,
@@ -94,6 +112,76 @@ def iid_partition(n: int, n_clients: int, seed: int = 0):
     idx = rng.permutation(n)
     per = n // n_clients
     return [idx[m * per:(m + 1) * per] for m in range(n_clients)]
+
+
+# --------------------------------------------------------------------------- #
+# systems heterogeneity: step times, per-client H_m, simulated wall clock
+# --------------------------------------------------------------------------- #
+
+
+def sample_step_times(model: str, n_clients: int, seed: int = 0, *,
+                      sigma: float = 0.6,
+                      tiers=(1.0, 2.0, 4.0), tier_probs=None) -> np.ndarray:
+    """Per-client RELATIVE step times (fastest client = 1.0) under a
+    systems-heterogeneity model from SYSTEMS_MODELS."""
+    rng = np.random.default_rng(seed)
+    if model == "uniform":
+        return np.ones(n_clients)
+    if model == "lognormal":
+        t = rng.lognormal(mean=0.0, sigma=sigma, size=n_clients)
+        return t / t.min()
+    if model == "tiers":
+        tiers = np.asarray(tiers, dtype=np.float64)
+        if tier_probs is None:
+            tier_probs = np.full(len(tiers), 1.0 / len(tiers))
+        t = rng.choice(tiers, size=n_clients, p=np.asarray(tier_probs))
+        return t / t.min()
+    raise ValueError(f"systems model {model!r}; expected one of "
+                     f"{SYSTEMS_MODELS}")
+
+
+def local_steps_from_times(step_times: np.ndarray, h_max: int, *,
+                           time_budget: float = None) -> np.ndarray:
+    """Per-client local-step vector H_m under a fixed wall-clock budget.
+
+    The budget defaults to ``h_max`` × the fastest client's step time: the
+    fastest client runs all H local steps, a client 2× slower runs ~H/2,
+    everyone runs at least 1. This is the workload-adaptation regime of
+    Lau et al. (2024): slow clients send fewer local steps rather than
+    stretching the barrier.
+    """
+    step_times = np.asarray(step_times, dtype=np.float64)
+    if time_budget is None:
+        time_budget = h_max * float(step_times.min())
+    h = np.floor(time_budget / step_times + 1e-9).astype(np.int64)
+    return np.clip(h, 1, h_max)
+
+
+def sample_local_steps(model: str, n_clients: int, h_max: int, seed: int = 0,
+                       **kw) -> np.ndarray:
+    """H_m sampled from a systems model: step times -> budgeted local steps."""
+    return local_steps_from_times(
+        sample_step_times(model, n_clients, seed=seed, **kw), h_max)
+
+
+def simulated_round_time(step_times: np.ndarray, local_steps, *,
+                         barrier: str = "sync",
+                         buffer_rounds: int = 0) -> float:
+    """Simulated wall-clock seconds per round (relative units).
+
+    sync   the server waits for every client: max_m(t_m · H_m).
+    async  a client whose delta may land up to B rounds late can spread its
+           work over B server periods, so the server pace only needs
+           max_m(t_m · H_m) / B — the staleness budget buys wall-clock.
+    """
+    step_times = np.asarray(step_times, dtype=np.float64)
+    h_m = np.asarray(local_steps, dtype=np.float64)
+    slowest = float((step_times * h_m).max())
+    if barrier == "sync":
+        return slowest
+    if barrier == "async":
+        return slowest / max(int(buffer_rounds), 1)
+    raise ValueError(f"barrier {barrier!r}; expected 'sync' or 'async'")
 
 
 def heterogeneity_score(labels: np.ndarray, parts) -> float:

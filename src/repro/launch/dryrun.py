@@ -31,11 +31,13 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.utils.hlo import collective_bytes, op_census
 from repro.utils.hlo_cost import analyze as hlo_analyze
+from repro.utils.hlo_cost import xla_cost_properties
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "auto", method: str = "savic", compression=None,
-            out_dir: str = "results/dryrun",
+            het_model=None, het_seed: int = 0, het_sigma: float = 0.6,
+            asynchrony=None, out_dir: str = "results/dryrun",
             save: bool = True, call=None, tag: str = "", verbose=True):
     mesh = make_production_mesh(multi_pod=multi_pod)
     shape = get_shape(shape_name)
@@ -46,7 +48,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     }
     t0 = time.time()
     built = build_step(arch, shape_name, mesh, mode=mode, method=method,
-                       compression=compression, call=call) \
+                       compression=compression, het_model=het_model,
+                       het_seed=het_seed, het_sigma=het_sigma,
+                       asynchrony=asynchrony, call=call) \
         if shape.kind == "train" else build_step(arch, shape_name, mesh,
                                                  call=call)
     with mesh:
@@ -59,9 +63,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t2 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):      # older jaxlib: one dict per executable
-        cost = cost[0] if cost else {}
+    cost = xla_cost_properties(compiled)  # list/dict normalized per jaxlib
     hlo = compiled.as_text()
     coll_total, coll_kind, coll_count = collective_bytes(hlo)
     tc = hlo_analyze(hlo)   # trip-count-corrected (scans execute L·H times)
@@ -109,6 +111,17 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             built.args[0]["params"])
         rec["compression"] = _dc.asdict(spec.sync.compression)
         rec["sync_payload_per_client"] = _engine.bytes_on_wire(spec, params_one)
+        # heterogeneity & staleness (DESIGN.md §5): the H_m vector is a spec
+        # constant (baked into the program); the buffer is server state
+        rec["asynchrony"] = _dc.asdict(spec.sync.asynchrony)
+        hs = spec.client.local_steps
+        rec["heterogeneity"] = {
+            "local_steps": list(hs) if hs is not None else None,
+            **{k: built.meta[k] for k in
+               ("het_model", "step_times", "sim_round_time_sync",
+                "sim_round_time_budgeted", "sim_round_time_async")
+               if k in built.meta},
+        }
     if verbose:
         print(f"[dryrun] {arch:18s} {shape_name:12s} mesh={rec['mesh']:8s} "
               f"mode={rec['mode']:6s} flops={rec['flops']:.3e} "
@@ -139,21 +152,36 @@ def main():
                          "(none|topk|randk|int8-stochastic)")
     ap.add_argument("--compression-k", type=float, default=0.1)
     ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--het-model", default="",
+                    help="systems-heterogeneity model for train shapes "
+                         "(uniform|lognormal|tiers); H_m is baked into the "
+                         "lowered program as scan masking")
+    ap.add_argument("--het-seed", type=int, default=0)
+    ap.add_argument("--het-sigma", type=float, default=0.6,
+                    help="lognormal straggler sigma for --het-model lognormal")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="server staleness buffer depth B (adds the sharded "
+                         "delta FIFO to the compiled state)")
+    ap.add_argument("--staleness-weight", default="constant")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
-    from repro.core.engine import CompressionSpec
+    from repro.core.engine import AsyncSpec, CompressionSpec
     comp = None if args.compression == "none" else CompressionSpec(
         op=args.compression, k=args.compression_k,
         error_feedback=args.error_feedback)
+    asy = None if not args.async_buffer else AsyncSpec(
+        buffer_rounds=args.async_buffer, weighting=args.staleness_weight)
+    het = args.het_model or None
 
     if args.all:
         failures = []
         for arch, shape in pairs_to_run():
             try:
                 run_one(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
-                        method=args.method, compression=comp,
-                        out_dir=args.out, tag=args.tag)
+                        method=args.method, compression=comp, het_model=het,
+                        het_seed=args.het_seed, het_sigma=args.het_sigma,
+                        asynchrony=asy, out_dir=args.out, tag=args.tag)
             except Exception as e:  # noqa
                 failures.append((arch, shape, repr(e)))
                 print(f"[dryrun] FAIL {arch} {shape}: {e}", flush=True)
@@ -164,8 +192,9 @@ def main():
         raise SystemExit(1 if failures else 0)
 
     run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
-            method=args.method, compression=comp, out_dir=args.out,
-            tag=args.tag)
+            method=args.method, compression=comp, het_model=het,
+            het_seed=args.het_seed, het_sigma=args.het_sigma, asynchrony=asy,
+            out_dir=args.out, tag=args.tag)
 
 
 if __name__ == "__main__":

@@ -70,7 +70,11 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                      reduced: bool = False, h_local: Optional[int] = None,
                      sv: Optional[SavicConfig] = None,
                      engine_spec: Optional[engine.EngineSpec] = None,
-                     compression: Optional[engine.CompressionSpec] = None):
+                     compression: Optional[engine.CompressionSpec] = None,
+                     het_model: Optional[str] = None, het_seed: int = 0,
+                     het_sigma: float = 0.6,
+                     local_steps: Optional[tuple] = None,
+                     asynchrony: Optional[engine.AsyncSpec] = None):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
     if call is None:
@@ -97,6 +101,37 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
         # every method, composing with an explicit engine_spec too
         spec = dataclasses.replace(
             spec, sync=dataclasses.replace(spec.sync, compression=compression))
+    het_meta = {}
+    if het_model is not None and local_steps is None:
+        # systems heterogeneity (DESIGN.md §5): sample per-client step times,
+        # derive the budgeted H_m vector, record the simulated wall clock
+        from repro.data import federated as fed
+        step_times = fed.sample_step_times(het_model, M, seed=het_seed,
+                                           sigma=het_sigma)
+        local_steps = tuple(int(h) for h in
+                            fed.local_steps_from_times(step_times, H))
+        asy = asynchrony or spec.sync.asynchrony
+        het_meta = {
+            "het_model": het_model,
+            "step_times": [round(float(t), 4) for t in step_times],
+            "sim_round_time_sync": round(fed.simulated_round_time(
+                step_times, [H] * M, barrier="sync"), 4),
+            # budgeted H_m barrier; only an actual staleness buffer makes it
+            # an "async" pace (B=0 would mislabel pure H_m budgeting)
+            "sim_round_time_budgeted": round(fed.simulated_round_time(
+                step_times, local_steps, barrier="sync"), 4),
+        }
+        if asy.buffer_rounds > 0:
+            het_meta["sim_round_time_async"] = round(fed.simulated_round_time(
+                step_times, local_steps, barrier="async",
+                buffer_rounds=asy.buffer_rounds), 4)
+    if local_steps is not None:
+        spec = dataclasses.replace(
+            spec, client=dataclasses.replace(spec.client,
+                                             local_steps=tuple(local_steps)))
+    if asynchrony is not None:
+        spec = dataclasses.replace(
+            spec, sync=dataclasses.replace(spec.sync, asynchrony=asynchrony))
     round_step = engine.build_round_step(model.loss, spec)
 
     def step(state, batch):
@@ -128,7 +163,7 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
         donate=(0,),
         meta={"mode": mode, "method": method, "clients": M, "h_local": H,
               "b_client": b_client, "cfg": cfg, "plan": plan,
-              "engine_spec": spec},
+              "engine_spec": spec, **het_meta},
     )
 
 
@@ -152,6 +187,17 @@ def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):
     if "ef" in state_shape:
         # EF compression residual: per-client, sharded exactly like params/mom
         state_spec["ef"] = pspec_m
+    if "buffer" in state_shape:
+        # staleness delta FIFO (DESIGN.md §5): single-replica shaped with a
+        # leading B dim — B is never sharded, inner dims like one replica's
+        # params (client-replicated server state, like server.m/v)
+        buf_one = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            state_shape["buffer"])
+        pspec_buf = params_pspecs(cfg, buf_one, mesh, plan, client_dim=False)
+        state_spec["buffer"] = jax.tree.map(
+            lambda s: P(None, *s), pspec_buf,
+            is_leaf=lambda x: isinstance(x, P))
     return state_spec
 
 

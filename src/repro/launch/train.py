@@ -30,6 +30,7 @@ from repro import checkpoint as ckpt_lib
 from repro.configs import get_config
 from repro.core import PrecondConfig, SavicConfig, engine, savic
 from repro.data import LMRoundLoader, TokenStream
+from repro.data import federated
 from repro.models import ModelCallConfig, build
 
 
@@ -68,6 +69,18 @@ def main(argv=None):
                     help="kept fraction per leaf for topk/randk")
     ap.add_argument("--error-feedback", action="store_true",
                     help="carry the EF residual buffer in the state pytree")
+    ap.add_argument("--het-model", default="uniform",
+                    choices=list(federated.SYSTEMS_MODELS),
+                    help="systems-heterogeneity model for per-client local "
+                         "steps H_m (engine-level: applies to every method)")
+    ap.add_argument("--het-sigma", type=float, default=0.6,
+                    help="lognormal straggler sigma for --het-model lognormal")
+    ap.add_argument("--het-seed", type=int, default=0)
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="server staleness buffer depth B (0 = synchronous)")
+    ap.add_argument("--staleness-weight", default="constant",
+                    choices=list(engine.STALENESS_WEIGHTINGS),
+                    help="staleness weighting s(tau) for the delta FIFO")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log", default="")
@@ -81,13 +94,22 @@ def main(argv=None):
 
     comp = engine.CompressionSpec(op=args.compression, k=args.compression_k,
                                   error_feedback=args.error_feedback)
+    asy = engine.AsyncSpec(buffer_rounds=args.async_buffer,
+                           weighting=args.staleness_weight)
+    local_steps = None
+    step_times = federated.sample_step_times(
+        args.het_model, args.clients, seed=args.het_seed, sigma=args.het_sigma)
+    if args.het_model != "uniform":
+        local_steps = tuple(int(h) for h in federated.local_steps_from_times(
+            step_times, args.h_local))
     if args.method == "savic":
         pc = PrecondConfig(kind=args.preconditioner, alpha=args.alpha)
         sv = SavicConfig(gamma=args.gamma, beta1=args.beta1,
                          scaling=args.scaling,
                          participation=args.participation,
                          sync_dtype=args.sync_dtype,
-                         compression=comp)
+                         compression=comp, local_steps=local_steps,
+                         asynchrony=asy)
         spec = savic.engine_spec(pc, sv)
     else:
         spec = engine.method_spec(
@@ -95,12 +117,22 @@ def main(argv=None):
             beta1=args.beta1, eta=args.server_eta, eta_l=args.gamma,
             tau=args.tau, server_beta1=args.server_beta1,
             participation=args.participation,
-            sync_dtype=args.sync_dtype, compression=comp)
+            sync_dtype=args.sync_dtype, compression=comp,
+            local_steps=local_steps, asynchrony=asy)
     round_step = jax.jit(engine.build_round_step(model.loss, spec))
     wire = engine.bytes_on_wire(spec, jax.eval_shape(model.init,
                                                      jax.random.PRNGKey(0)))
     print(f"[train] sync payload/client/round: {wire['total_bytes']/1e6:.3f} "
           f"MB ({wire['compression_x']}x vs uncompressed)", flush=True)
+    sim_t = federated.simulated_round_time(
+        step_times, local_steps or [args.h_local] * args.clients,
+        barrier="async" if args.async_buffer else "sync",
+        buffer_rounds=args.async_buffer)
+    if args.het_model != "uniform" or args.async_buffer:
+        print(f"[train] het={args.het_model} H_m="
+              f"{list(local_steps) if local_steps else 'uniform'} "
+              f"buffer={args.async_buffer} simulated round time {sim_t:.3f} "
+              f"(rel. units)", flush=True)
 
     state = engine.init_state(jax.random.PRNGKey(args.seed), model.init, spec,
                               args.clients)
@@ -130,6 +162,9 @@ def main(argv=None):
             extra = f" step {rec['step_norm']:.3e}"
         if "compression_err" in metrics:
             rec["compression_err"] = float(metrics["compression_err"])
+        if "staleness" in metrics:
+            rec["staleness"] = float(metrics["staleness"])
+        rec["sim_time"] = round((r + 1) * sim_t, 4)  # simulated wall clock
         log.append(rec)
         print(f"[train] round {r:4d} loss {loss:.4f} drift {drift:.3e}"
               f"{extra} ({time.time()-t0:.1f}s)", flush=True)

@@ -26,6 +26,21 @@ import dataclasses
 import re
 from collections import defaultdict
 
+
+def xla_cost_properties(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jaxlib versions.
+
+    Newer jaxlib (the CI container's) returns a list with one dict per
+    executable; older versions return the dict directly; either may be empty.
+    Every consumer of the raw XLA numbers (dryrun.py, tests) should go
+    through here instead of unwrapping ad hoc. Regression-pinned in
+    tests/test_hlo_cost.py.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
     "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,

@@ -175,6 +175,7 @@ def _run_hetero(hetero, comp, rounds=200, H=5, seed=0):
     return float(np.mean(tail)), state
 
 
+@pytest.mark.slow
 def test_error_feedback_fixes_topk_stall(hetero):
     """Acceptance: plain topk (k=6/24) stalls above the uncompressed loss;
     with the EF residual it matches the uncompressed final loss within 2%."""
@@ -190,6 +191,7 @@ def test_error_feedback_fixes_topk_stall(hetero):
     assert float(jnp.abs(ef_state["ef"]["x"]).max()) > 0.0
 
 
+@pytest.mark.slow
 def test_randk_ef_is_contractive_and_stable(hetero):
     """Under EF, randk drops its dim/k unbiasedness rescale: the rescaled
     operator is non-contractive and the residual would amplify ~(dim/k − 1)×
@@ -212,6 +214,7 @@ def test_randk_ef_is_contractive_and_stable(hetero):
     assert ef_loss <= none_loss * 1.10, (ef_loss, none_loss)
 
 
+@pytest.mark.slow
 def test_int8_stochastic_tracks_uncompressed(hetero):
     """8-bit stochastic sync is unbiased and ~2⁻⁸-relative noise: final loss
     stays within 2% of uncompressed on the same trajectory budget."""

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.utils.hlo_cost import analyze
+from repro.utils.hlo_cost import analyze, xla_cost_properties
 from repro.utils.hlo import collective_bytes
 
 
@@ -55,12 +55,33 @@ def test_cost_analysis_undercounts_but_we_do_not():
         y, _ = jax.lax.scan(body, x, None, length=8)
         return y
     c = _compile(f, jnp.ones((128, 128)))
-    cost = c.cost_analysis()
-    if isinstance(cost, list):      # older jaxlib: one dict per executable
-        cost = cost[0]
-    xla = cost["flops"]
+    xla = xla_cost_properties(c)["flops"]
     ours = analyze(c.as_text())["flops"]
     assert ours == pytest.approx(8 * xla, rel=1e-6)
+
+
+def test_xla_cost_properties_normalizes_list_returns():
+    """Regression: newer jaxlib's cost_analysis() returns a LIST (one dict
+    per executable) — the CI container does this — while older versions
+    return the dict directly. xla_cost_properties must flatten every shape
+    to one plain dict."""
+    class Fake:
+        def __init__(self, ret):
+            self._ret = ret
+
+        def cost_analysis(self):
+            return self._ret
+
+    assert xla_cost_properties(Fake([{"flops": 7.0}]))["flops"] == 7.0
+    assert xla_cost_properties(Fake(({"flops": 3.0},)))["flops"] == 3.0
+    assert xla_cost_properties(Fake({"flops": 5.0}))["flops"] == 5.0
+    assert xla_cost_properties(Fake([])) == {}
+    assert xla_cost_properties(Fake(None)) == {}
+    # and against a REAL compiled executable on this container's jaxlib:
+    # whatever shape cost_analysis() returns, the result is one flat dict
+    c = _compile(lambda a, b: a @ b, jnp.ones((16, 16)), jnp.ones((16, 16)))
+    cost = xla_cost_properties(c)
+    assert isinstance(cost, dict) and cost.get("flops", 0) > 0
 
 
 def test_collective_parser_smoke():

@@ -117,6 +117,7 @@ def quad():
     return QuadraticProblem.make(d=20, M=4, mu=0.5, L=4.0, sigma=0.6, seed=3)
 
 
+@pytest.mark.slow
 def test_thm1_noise_ball_scales_with_gamma(quad):
     """Stationary E‖x−x*‖² grows ~linearly with γ (Theorem 1's γΓσ²/α²μM
     term). Both runs long enough that the geometric transient has died."""
@@ -139,6 +140,7 @@ def test_thm1_geometric_transient(quad):
     assert measured < rate ** 0.25, (measured, rate)
 
 
+@pytest.mark.slow
 def test_drift_term_needs_heterogeneity(quad):
     """Two facts about the (H−1) term, both validated:
 
