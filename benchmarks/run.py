@@ -24,8 +24,12 @@ under results/bench/.
   comm        communication volume per round: SAVIC sync vs per-step DDP
               (analytic, from param counts) + measured collective bytes from
               dry-run artifacts when present.
-  kernels     µs/call for the three Pallas kernels (interpret mode on CPU —
-              correctness-path timing, NOT TPU perf) vs their jnp references.
+  kernels     µs/call for the Pallas kernels (interpret mode on CPU —
+              correctness-path timing, NOT TPU perf) vs their jnp references,
+              PLUS the fused flat-buffer local step: HBM bytes per launch
+              (xla_cost_properties) fused vs the pre-PR per-leaf kernel path,
+              per PrecondConfig kind; writes BENCH_kernels.json at the repo
+              root.
 """
 from __future__ import annotations
 
@@ -582,6 +586,199 @@ def _time(f, *args, n=5):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+FUSED_BENCH_M = 8
+FUSED_BENCH_SHAPES = {"w1": (256, 128), "b1": (128,), "w2": (128, 10),
+                      "b2": (10,)}
+FUSED_BENCH_CASES = (
+    # (tag, PrecondConfig kind, D advances in-loop?, external Hutchinson stat?)
+    ("adam_local", "adam", True, False),
+    ("rmsprop_local", "rmsprop", True, False),
+    ("adagrad_local", "adagrad", True, False),
+    ("oasis_local", "oasis", True, True),
+    ("adam_global", "adam", False, False),
+)
+
+
+def bench_fused_step():
+    """HBM bytes on the client local step, fused flat-buffer kernel vs the
+    pre-PR per-leaf kernel path — per PrecondConfig kind -> BENCH_kernels.json.
+
+    Both arms are measured with ``xla_cost_properties`` ("bytes accessed") on
+    compiled programs, summed PER LAUNCH, because HBM round-trips happen at
+    launch boundaries:
+
+      * pre-PR path — what ``use_fused_kernel`` emitted before the flat-buffer
+        refactor: an XLA momentum pass, ONE ``scaled_update`` launch PER LEAF
+        (whose contract includes a zeros operand and a dead momentum write),
+        and — when D advances every step — a separate D̂ EMA pass with its own
+        HBM round-trip.  6+ reads / 4 writes per element across 3 launches.
+      * fused path — the ``fused_step_flat`` kernel contract: ONE launch over
+        the per-client flat buffer, 4–5 reads / 2–3 writes per element.  On
+        CPU the Mosaic kernel cannot compile, so the measured program is the
+        kernel's jnp oracle (``ref.fused_step_ref``) in one jit — XLA emits a
+        single fusion whose traffic IS the kernel's operand/result contract;
+        tests/test_fused_step.py pins the kernel to that oracle.
+
+    Wall-times: the oracle fusions (both arms; TPU-shaped traffic) plus the
+    interpret-mode Pallas kernel (correctness-path timing, NOT TPU perf).
+    """
+    from repro.core import preconditioner as PC
+    from repro.kernels import ops, ref
+    from repro.utils.flatten import FlatLayout
+    from repro.utils.hlo_cost import xla_cost_properties
+
+    M = FUSED_BENCH_M
+    k = jax.random.key(7)
+    tree = lambda i0: {name: jax.random.normal(jax.random.fold_in(k, i0 + i),
+                                               (M,) + shp)
+                       for i, (name, shp) in
+                       enumerate(FUSED_BENCH_SHAPES.items())}
+    p_t, m_t, g_t = tree(0), tree(10), tree(20)
+    d_t = jax.tree.map(lambda x: jnp.abs(x) + 0.1, tree(30))
+    h_t = tree(40)
+    layout = FlatLayout.for_tree(p_t, batch_dims=1)
+    P, Mo, G = (layout.flatten(x, batch_dims=1) for x in (p_t, m_t, g_t))
+    D, Hs = layout.flatten(d_t, batch_dims=1), layout.flatten(h_t, batch_dims=1)
+    t_m = jnp.zeros((M,), jnp.int32)
+
+    def _bytes(fn, *args):
+        c = jax.jit(fn).lower(*args).compile()
+        cost = xla_cost_properties(c)
+        if "bytes accessed" not in cost:
+            # fail loudly: a silent 0 would fabricate the reduction ratio
+            raise RuntimeError("cost_analysis() has no 'bytes accessed' on "
+                               f"this backend; keys: {sorted(cost)}")
+        return float(cost["bytes accessed"]), c
+
+    rows, out, entries = [], [], {}
+    for tag, kind, local, hutch in FUSED_BENCH_CASES:
+        pc = PC.PrecondConfig(kind=kind, alpha=1e-2)
+        squared = pc.rule == "squared"
+
+        # ---- pre-PR per-leaf kernel path ------------------------------------
+        # Verbatim launch structure of the old fused path: an XLA momentum
+        # pass, then PER LEAF (flattened to (M·n_leaf,)) a pad launch to the
+        # fixed BLOCK = 8·128·16 (the old kernel padded every ragged leaf all
+        # the way up — custom-call operands materialize, so the pad copies
+        # are real HBM traffic), the kernel launch (zeros in the momentum
+        # slot, beta1 pre-applied, dead m output — see ops.scaled_update_tree)
+        # and the [:n] slice launch back.
+        OLD_BLOCK = 8 * 128 * 16
+
+        def mom_pass(m, g):
+            return jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+
+        by_mom, c_mom = _bytes(mom_pass, m_t, g_t)
+        by_leaf = 0.0
+        c_leaf = []
+        for name in FUSED_BENCH_SHAPES:
+            n_leaf = int(np.prod(FUSED_BENCH_SHAPES[name])) * M
+            npad = (OLD_BLOCK - n_leaf % OLD_BLOCK) % OLD_BLOCK
+            flat = lambda x: x.reshape(-1)
+            args = (flat(p_t[name]), jnp.zeros((n_leaf,), jnp.float32),
+                    flat(m_t[name]), flat(d_t[name]))
+            launches = []
+            if npad:
+                def pad_fn(p, z, m, d, _npad=npad):
+                    pad = lambda x, v: jnp.concatenate(
+                        [x, jnp.full((_npad,), v, x.dtype)])
+                    return pad(p, 0), pad(z, 0), pad(m, 0), pad(d, 1.0)
+                b, c = _bytes(pad_fn, *args)
+                by_leaf += b
+                launches.append((c, args))
+                args = tuple(np.asarray(a) for a in c(*args))
+                args = tuple(jnp.asarray(a) for a in args)
+
+            def leaf_fn(p, z, m, d):
+                return ref.scaled_update_ref(p, z, m, d, gamma=0.01,
+                                             beta1=0.0, alpha=1e-2,
+                                             squared=squared)
+            b, c = _bytes(leaf_fn, *args)
+            by_leaf += b
+            launches.append((c, args))
+            if npad:
+                outs = tuple(jnp.asarray(np.asarray(o)) for o in c(*args))
+
+                def slice_fn(po, mo, _n=n_leaf):
+                    return po[:_n], mo[:_n]
+                b, c = _bytes(slice_fn, *outs)
+                by_leaf += b
+                launches.append((c, outs))
+            c_leaf.append(launches)
+        by_dpass = 0.0
+        c_dpass = None
+        if local:
+            def d_pass(d, g, h, t):
+                b = PC.beta_t(pc, t)
+                stat = h if hutch else jax.tree.map(lambda x: x ** 2, g)
+                if kind == "adagrad":
+                    return jax.tree.map(lambda dd, hh: dd + hh, d, stat)
+                return jax.tree.map(lambda dd, hh: b * dd + (1.0 - b) * hh,
+                                    d, stat)
+            by_dpass, c_dpass = _bytes(d_pass, d_t, g_t, h_t, jnp.int32(0))
+        bytes_prepr = by_mom + by_leaf + by_dpass
+
+        # ---- fused flat-buffer kernel contract (one launch) ----------------
+        kw = dict(gamma=0.01, beta1=0.9, alpha=1e-2, beta2=pc.beta2,
+                  kind=kind, clip="max", schedule=pc.schedule, update_d=local)
+        hstat = Hs if (local and hutch) else None
+        d_arg = D if local else D[0]
+        bytes_fused, c_fused = _bytes(
+            lambda *a: ref.fused_step_ref(*a, **kw), P, Mo, G, d_arg, hstat,
+            t_m, None)
+
+        ratio = bytes_prepr / max(bytes_fused, 1.0)
+        us_prepr = _time(lambda: [c_mom(m_t, g_t)]
+                         + [c(*a) for launches in c_leaf
+                            for c, a in launches]
+                         + ([c_dpass(d_t, g_t, h_t, jnp.int32(0))]
+                            if c_dpass else []))
+        us_oracle = _time(lambda: c_fused(P, Mo, G, d_arg, hstat, t_m, None))
+        us_interp = _time(lambda: ops.fused_local_step(
+            P, Mo, G, d_arg, hstat, t_m, None, **kw))
+        rec = {
+            "bytes_prepr_path": bytes_prepr,
+            "bytes_fused": bytes_fused,
+            "hbm_reduction_x": round(ratio, 2),
+            "launches_prepr": 1 + sum(len(l) for l in c_leaf) + (1 if local
+                                                                 else 0),
+            "launches_fused": 1,
+            "us_prepr_oracle": round(us_prepr, 1),
+            "us_fused_oracle": round(us_oracle, 1),
+            "us_fused_interpret": round(us_interp, 1),
+        }
+        entries[tag] = rec
+        rows.append({"case": tag, **rec})
+        out.append(("kernels", f"hbm_reduction_x_{tag}", rec["hbm_reduction_x"]))
+
+    path_json = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_kernels.json")
+    with open(path_json, "w") as f:
+        json.dump({
+            "bench": "fused_local_step_hbm_bytes",
+            "config": {
+                "clients": FUSED_BENCH_M,
+                "leaves": {nm: list(s) for nm, s in
+                           FUSED_BENCH_SHAPES.items()},
+                "n_total_per_client": FlatLayout.for_tree(
+                    {n_: jax.ShapeDtypeStruct(s, jnp.float32) for n_, s in
+                     FUSED_BENCH_SHAPES.items()}).n_total,
+                "backend": jax.default_backend(),
+                "measurement": "xla_cost_properties('bytes accessed'), "
+                               "summed per launch (HBM round-trips happen at "
+                               "launch boundaries). pre-PR arm = the verbatim "
+                               "old launch structure: momentum pass + per-"
+                               "leaf pad-to-BLOCK / kernel-contract / slice "
+                               "launches + separate D-EMA pass. fused arm = "
+                               "the fused_step_flat kernel's jnp-oracle "
+                               "contract in one jit (kernel pinned to it in "
+                               "tests/test_fused_step.py); interpret-mode "
+                               "timing is correctness-path, not TPU perf",
+            },
+            "cases": entries}, f, indent=1)
+    return out, rows
+
+
 def bench_kernels():
     from repro.kernels import ops, ref
     rows, out = [], []
@@ -621,6 +818,11 @@ def bench_kernels():
                  "us_ref_jit": us_r})
     for r in rows:
         out.append(("kernels", r["kernel"] + "_us", round(r["us_interpret"])))
+    # fused flat-buffer local step: HBM bytes fused vs pre-PR per-leaf path
+    # (per PrecondConfig kind; writes BENCH_kernels.json at the repo root)
+    f_out, f_rows = bench_fused_step()
+    out.extend(f_out)
+    _emit(f_rows, "kernels_fused")
     return out, _emit(rows, "kernels")
 
 

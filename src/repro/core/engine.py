@@ -9,8 +9,10 @@ configuration of three orthogonal layers:
   * **ClientLoop**   — H local steps on each of M clients, ``vmap`` over M
     inside a ``lax.scan`` over H (XLA provably emits no cross-client collective
     inside the scan). The per-step update is pluggable: plain SGD, heavy-ball,
-    or locally-scaled via ``preconditioner.py``, with the fused Pallas
-    ``scaled_update`` kernel as a first-class option.
+    or locally-scaled via ``preconditioner.py``. With ``use_fused_kernel`` the
+    whole client state rides as per-client flat fp32 buffers and each local
+    step is ONE fused Pallas pass (``kernels.ops.fused_local_step``) for every
+    D̂ rule — bit-identical (fp32) to the tree path (DESIGN.md §7).
   * **SyncStrategy** — the only cross-client traffic per round: full mean,
     weighted partial participation (FedAvg-style client sampling), quantized
     ``sync_dtype`` all-reduce, and a pluggable delta **compression** layer
@@ -50,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core import preconditioner as PC
 from repro.core.preconditioner import PrecondConfig
+from repro.utils.flatten import FlatLayout, all_float32
 
 
 # --------------------------------------------------------------------------- #
@@ -77,7 +80,9 @@ class ClientLoopSpec:
     stat_source: str = "avg_grad"
     weight_decay: float = 0.0
     grad_clip: float = 0.0         # global-norm clip per local step (0 = off)
-    use_fused_kernel: bool = False # Pallas scaled_update kernel (TPU)
+    # flat-buffer fused local step (DESIGN.md §7): ONE Pallas pass per step
+    # for every PrecondConfig kind, bit-identical (fp32) to the tree path
+    use_fused_kernel: bool = False
     reset_momentum: bool = False   # zero m at round start (FedOpt clients)
     local_steps: Optional[tuple] = None  # per-client H_m (None = uniform H)
 
@@ -309,6 +314,7 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
         # FedAvg; heavy-ball local SGD is savic with pc_kind="identity"
         return EngineSpec(
             client=ClientLoopSpec(lr=eta_l, momentum=0.0,
+                                  use_fused_kernel=use_fused_kernel,
                                   local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="average"),
@@ -316,6 +322,7 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
     if method in ("fedadagrad", "fedadam", "fedyogi"):
         return EngineSpec(
             client=ClientLoopSpec(lr=eta_l, momentum=0.0, reset_momentum=True,
+                                  use_fused_kernel=use_fused_kernel,
                                   local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="adaptive", opt=method[3:], eta=eta,
@@ -415,14 +422,8 @@ def _apply_update(params, mom, grads, pstate, spec: EngineSpec):
     if cl.weight_decay:
         g = jax.tree.map(lambda gi, p: gi + cl.weight_decay * p, g, params)
     mom = jax.tree.map(lambda m, gi: cl.momentum * m + gi, mom, g)
-    if cl.use_fused_kernel and pc.kind != "identity":
-        from repro.kernels import ops as kops
-        params = kops.scaled_update_tree(params, mom, pstate["d"],
-                                         cl.lr, pc.alpha,
-                                         squared=pc.rule == "squared")
-    else:
-        direction = PC.precondition(pc, pstate, mom)
-        params = jax.tree.map(lambda p, d: p - cl.lr * d, params, direction)
+    direction = PC.precondition(pc, pstate, mom)
+    params = jax.tree.map(lambda p, d: p - cl.lr * d, params, direction)
     return params, mom
 
 
@@ -494,7 +495,98 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec):
             scan_body, (params_m, mom_m, pstate, grads0), xs)
         return params_m, mom_m, pstate, last_grads, losses
 
+    if cl.use_fused_kernel:
+        return local_step_one_client, _fused_run(loss_fn, grad_fn, spec, run)
     return local_step_one_client, run
+
+
+def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run):
+    """The flat-buffer fused client loop (DESIGN.md §7).
+
+    Same contract as the tree ``run``, but the whole client state rides as
+    per-client flat fp32 buffers ``(M, n_total)`` — flattened here at round
+    start, unflattened only at the sync barrier — and each local step is ONE
+    ``kernels.ops.fused_local_step`` Pallas call covering all M clients and
+    every ``PrecondConfig`` kind: the D̂ update (rule-2 / rule-3 / AdaGrad,
+    const or debias β_t via scalar-prefetched per-client ``t``) fuses with the
+    momentum + scaled parameter update in a single pass.  Bit-identical (fp32)
+    to the tree path for every kind × schedule × clip and all six METHODS
+    (pinned in tests/test_fused_step.py); non-fp32 client state falls back to
+    the tree path (the flat view is an fp32 buffer by contract).
+    """
+    cl, pc = spec.client, spec.precond
+    has_d = pc.kind != "identity"
+    # "local" here = D advances inside the loop (global D updates at sync)
+    local = cl.scaling == "local" and has_d
+
+    def run(params_m, mom_m, pstate, micro, keys):
+        if not (all_float32(params_m) and all_float32(mom_m)
+                and (not has_d or all_float32(pstate["d"]))):
+            return tree_run(params_m, mom_m, pstate, micro, keys)
+        H = jax.tree.leaves(micro)[0].shape[0]
+        M = jax.tree.leaves(params_m)[0].shape[0]
+        masked = _needs_masking(cl, H, M)
+        layout = FlatLayout.for_tree(params_m, batch_dims=1)
+        from repro.kernels import ops as kops
+
+        carry0 = {"p": layout.flatten(params_m, batch_dims=1),
+                  "m": layout.flatten(mom_m, batch_dims=1)}
+        carry0["g"] = jnp.zeros_like(carry0["p"])     # carried sync grads
+        if has_d:
+            carry0["d"] = layout.flatten(pstate["d"],
+                                         batch_dims=1 if local else 0)
+        if local:
+            carry0["t"] = pstate["t"]                 # per-client (M,) i32
+
+        def scan_body(carry, xs):
+            if masked:
+                micro_m, ks, h_idx = xs
+                active = h_idx < jnp.asarray(cl.local_steps, jnp.int32)
+            else:
+                micro_m, ks = xs
+            params_tree = layout.unflatten(carry["p"], batch_dims=1)
+            losses, grads = jax.vmap(grad_fn)(params_tree, micro_m)
+            if cl.grad_clip:
+                # tree-level clip, exactly as the tree path: the CLIPPED
+                # grads are what the carry freezes for the sync-time D stat
+                grads = jax.vmap(lambda gt: _clip(gt, cl.grad_clip))(grads)
+            G = layout.flatten(grads, batch_dims=1)
+            hstat = None
+            if local and pc.uses_hutchinson:
+                stats = jax.vmap(lambda p_, mc, k_: PC.hutchinson_diag(
+                    loss_fn, p_, mc, k_))(params_tree, micro_m, ks)
+                hstat = layout.flatten(stats, batch_dims=1)
+            p_new, m_new, d_new = kops.fused_local_step(
+                carry["p"], carry["m"], G, carry.get("d"), hstat,
+                carry.get("t"), None, gamma=cl.lr, beta1=cl.momentum,
+                weight_decay=cl.weight_decay, alpha=pc.alpha, beta2=pc.beta2,
+                kind=pc.kind, clip=pc.clip, schedule=pc.schedule,
+                update_d=local)
+            new = dict(carry)
+            new["p"], new["m"], new["g"] = p_new, m_new, G
+            if local:
+                new["d"] = d_new
+                new["t"] = carry["t"] + 1
+            if masked:
+                aw = active[:, None]
+                for k2 in ("p", "m", "g") + (("d",) if local else ()):
+                    new[k2] = jnp.where(aw, new[k2], carry[k2])
+                if local:
+                    new["t"] = jnp.where(active, new["t"], carry["t"])
+            return new, losses
+
+        xs = (micro, keys, jnp.arange(H, dtype=jnp.int32)) if masked \
+            else (micro, keys)
+        carry, losses = jax.lax.scan(scan_body, carry0, xs)
+        params_m = layout.unflatten(carry["p"], batch_dims=1)
+        mom_m = layout.unflatten(carry["m"], batch_dims=1)
+        last_grads = layout.unflatten(carry["g"], batch_dims=1)
+        if local:
+            pstate = {"d": layout.unflatten(carry["d"], batch_dims=1),
+                      "t": carry["t"]}
+        return params_m, mom_m, pstate, last_grads, losses
+
+    return run
 
 
 def _needs_masking(cl: ClientLoopSpec, H: int, M: int) -> bool:
@@ -569,6 +661,37 @@ def compress_tree(spec: CompressionSpec, deltas, key):
     keys = jax.random.split(jax.random.fold_in(key, 17), len(leaves))
     return jax.tree.unflatten(
         treedef, [_compress_leaf(spec, x, k) for x, k in zip(leaves, keys)])
+
+
+def measured_wire_bytes(comp: CompressionSpec, compressed,
+                        elem_bytes: int = 4):
+    """Encoded client→server payload measured from the ACTUAL arrays
+    ``compress_tree`` emitted (its decoded (M, ...) views) — the ground truth
+    ``bytes_on_wire``'s analytic accounting is pinned against
+    (tests/test_compression.py).
+
+    Per client: topk/randk count the surviving nonzero entries, each a
+    (fp32 value, int32 index) pair; int8-stochastic moves 1 byte/element plus
+    one fp32 scale per leaf; identity specs move every element at
+    ``elem_bytes``. Returns an int64 numpy array of shape (M,). Caveat: a
+    kept-but-exactly-zero delta entry is indistinguishable from a dropped one
+    in the decoded view, so topk/randk counts are exact only for continuous
+    deltas (which is what the engine compresses).
+    """
+    import numpy as np
+    leaves = jax.tree.leaves(compressed)
+    M = leaves[0].shape[0]
+    total = np.zeros((M,), np.int64)
+    for leaf in leaves:
+        flat = np.asarray(leaf).reshape(M, -1)
+        n = flat.shape[1]
+        if comp.is_identity():
+            total += n * elem_bytes
+        elif comp.op in ("topk", "randk"):
+            total += (flat != 0).sum(axis=1).astype(np.int64) * (4 + 4)
+        else:  # int8-stochastic
+            total += n * 1 + 4
+    return total
 
 
 def bytes_on_wire(spec: EngineSpec, params) -> dict:

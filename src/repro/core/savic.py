@@ -33,7 +33,9 @@ class SavicConfig:
     average_momentum: bool = True      # average momentum buffers at sync
     weight_decay: float = 0.0
     grad_clip: float = 0.0             # global-norm clip per local step (0=off)
-    use_fused_kernel: bool = False     # Pallas scaled_update kernel (TPU)
+    # flat-buffer fused client loop: one Pallas pass per local step for every
+    # preconditioner kind, bit-identical in fp32 (DESIGN.md §7)
+    use_fused_kernel: bool = False
     # sync compression (beyond-paper; cf. the quantization line of related
     # work [19,20]): all-reduce params/momentum in this dtype ("" = full)
     sync_dtype: str = ""

@@ -49,6 +49,26 @@ def scaled_update_tree(params, mom, d_tree, gamma, alpha, squared=True):
     return jax.tree.unflatten(treedef, news)
 
 
+def fused_local_step(p, m, g, d=None, h=None, t=None, s=None, *, gamma, beta1,
+                     weight_decay=0.0, alpha, beta2=0.999, kind, clip="max",
+                     schedule="const", update_d=False):
+    """One fused generic-scaling local step on (M, n) flat client buffers.
+
+    The engine's ``use_fused_kernel`` fast path (DESIGN.md §7): fuses the D̂
+    update (rule-2/rule-3/AdaGrad, const or debias β_t) with the momentum and
+    scaled parameter update in ONE ``pallas_call`` covering all M clients.
+    ``d`` is (M, n) for local scaling, (n,) for global, None for identity;
+    ``h`` is the external (Hutchinson) stat; ``t``/``s`` are per-client step
+    counters / grad-clip scales (scalar prefetch). Returns (p', m', d'|None).
+    """
+    return _su.fused_step_flat(p, m, g, d, h, t, s, gamma=float(gamma),
+                               beta1=float(beta1),
+                               weight_decay=float(weight_decay),
+                               alpha=float(alpha), beta2=float(beta2),
+                               kind=kind, clip=clip, schedule=schedule,
+                               update_d=update_d, interpret=_interpret())
+
+
 def quantize_update(x, u, scale):
     """Fused stochastic int8 encode + fp32 decode on arbitrarily-shaped arrays.
 

@@ -37,7 +37,8 @@ from repro.utils.hlo_cost import xla_cost_properties
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "auto", method: str = "savic", compression=None,
             het_model=None, het_seed: int = 0, het_sigma: float = 0.6,
-            asynchrony=None, out_dir: str = "results/dryrun",
+            asynchrony=None, use_fused_kernel: bool = False,
+            out_dir: str = "results/dryrun",
             save: bool = True, call=None, tag: str = "", verbose=True):
     mesh = make_production_mesh(multi_pod=multi_pod)
     shape = get_shape(shape_name)
@@ -50,7 +51,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     built = build_step(arch, shape_name, mesh, mode=mode, method=method,
                        compression=compression, het_model=het_model,
                        het_seed=het_seed, het_sigma=het_sigma,
-                       asynchrony=asynchrony, call=call) \
+                       asynchrony=asynchrony,
+                       use_fused_kernel=use_fused_kernel, call=call) \
         if shape.kind == "train" else build_step(arch, shape_name, mesh,
                                                  call=call)
     with mesh:
@@ -114,6 +116,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         # heterogeneity & staleness (DESIGN.md §5): the H_m vector is a spec
         # constant (baked into the program); the buffer is server state
         rec["asynchrony"] = _dc.asdict(spec.sync.asynchrony)
+        if "flat_layout" in built.meta:
+            # fused flat-buffer client loop (DESIGN.md §7): the in-round
+            # flat-view layout the scan runs over
+            rec["flat_layout"] = built.meta["flat_layout"]
+        if "fused_kernel_fallback" in built.meta:
+            rec["fused_kernel_fallback"] = built.meta["fused_kernel_fallback"]
         hs = spec.client.local_steps
         rec["heterogeneity"] = {
             "local_steps": list(hs) if hs is not None else None,
@@ -163,6 +171,9 @@ def main():
                     help="server staleness buffer depth B (adds the sharded "
                          "delta FIFO to the compiled state)")
     ap.add_argument("--staleness-weight", default="constant")
+    ap.add_argument("--use-fused-kernel", action="store_true",
+                    help="flat-buffer fused client loop (one Pallas pass per "
+                         "local step; artifact records the flat-view layout)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -181,7 +192,9 @@ def main():
                 run_one(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
                         method=args.method, compression=comp, het_model=het,
                         het_seed=args.het_seed, het_sigma=args.het_sigma,
-                        asynchrony=asy, out_dir=args.out, tag=args.tag)
+                        asynchrony=asy,
+                        use_fused_kernel=args.use_fused_kernel,
+                        out_dir=args.out, tag=args.tag)
             except Exception as e:  # noqa
                 failures.append((arch, shape, repr(e)))
                 print(f"[dryrun] FAIL {arch} {shape}: {e}", flush=True)
@@ -194,6 +207,7 @@ def main():
     run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
             method=args.method, compression=comp, het_model=het,
             het_seed=args.het_seed, het_sigma=args.het_sigma, asynchrony=asy,
+            use_fused_kernel=args.use_fused_kernel,
             out_dir=args.out, tag=args.tag)
 
 

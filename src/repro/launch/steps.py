@@ -74,7 +74,8 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                      het_model: Optional[str] = None, het_seed: int = 0,
                      het_sigma: float = 0.6,
                      local_steps: Optional[tuple] = None,
-                     asynchrony: Optional[engine.AsyncSpec] = None):
+                     asynchrony: Optional[engine.AsyncSpec] = None,
+                     use_fused_kernel: bool = False):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
     if call is None:
@@ -82,10 +83,13 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     if mode in ("paper_fsdp", "plain") and call.act_shard is None:
         # pin batch-parallel activations (otherwise the d-sharded embedding
         # wins GSPMD propagation and attention replicates; see EXPERIMENTS §Perf)
-        spec = P(tuple(plan.batch), None, None)
+        # NB: bind the pspec at definition time — `spec` is rebound to the
+        # EngineSpec below, and a late-binding closure here handed THAT to
+        # NamedSharding (broke every plain-mode build at trace time)
+        act_spec = P(tuple(plan.batch), None, None)
         call = dataclasses.replace(
-            call, act_shard=lambda x: jax.lax.with_sharding_constraint(
-                x, NamedSharding(mesh, spec)))
+            call, act_shard=lambda x, _s=act_spec:
+                jax.lax.with_sharding_constraint(x, NamedSharding(mesh, _s)))
     if cfg.moe and call.moe_shard is None:
         call = dataclasses.replace(
             call, moe_shard=_moe_shard_fn(cfg, mesh, plan))
@@ -132,6 +136,23 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     if asynchrony is not None:
         spec = dataclasses.replace(
             spec, sync=dataclasses.replace(spec.sync, asynchrony=asynchrony))
+    if use_fused_kernel:
+        # engine-level knob: the flat-buffer fused client loop (DESIGN.md §7)
+        # is valid for every method/PrecondConfig kind
+        spec = dataclasses.replace(
+            spec, client=dataclasses.replace(spec.client,
+                                             use_fused_kernel=True))
+    if spec.client.use_fused_kernel and (_ax(mesh, plan.model) > 1
+                                         or plan.fsdp_params):
+        # GSPMD cannot lay the flat (M, n_total) view over model-/FSDP-sharded
+        # leaves without resharding the full client state EVERY local step
+        # (measured: ~4e5× collective-byte blowup on the 16×16 mesh) — take
+        # the tree path; per-shard flat views need shard_map (DESIGN.md §7)
+        spec = dataclasses.replace(
+            spec, client=dataclasses.replace(spec.client,
+                                             use_fused_kernel=False))
+        het_meta["fused_kernel_fallback"] = "model-sharded params (flat view " \
+                                            "needs replicated-leaf clients)"
     round_step = engine.build_round_step(model.loss, spec)
 
     def step(state, batch):
@@ -145,6 +166,14 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     micro = batch_struct(cfg, b_client, shape.seq_len)
     batch_shape = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((M, H) + s.shape, s.dtype), micro)
+
+    if spec.client.use_fused_kernel:
+        # record the in-round flat-view layout (DESIGN.md §7): the state
+        # pytree, shardings and donation below are the tree path's — the
+        # flat buffer exists only between round start and the sync barrier
+        from repro.utils.flatten import FlatLayout
+        het_meta["flat_layout"] = FlatLayout.for_tree(
+            state_shape["params"], batch_dims=1).describe()
 
     # ---- shardings (see DESIGN.md §2) ----------------------------------------
     state_spec = _engine_state_spec(cfg, state_shape, mesh, plan, spec)

@@ -81,6 +81,10 @@ def main(argv=None):
     ap.add_argument("--staleness-weight", default="constant",
                     choices=list(engine.STALENESS_WEIGHTINGS),
                     help="staleness weighting s(tau) for the delta FIFO")
+    ap.add_argument("--use-fused-kernel", action="store_true",
+                    help="flat-buffer fused client loop: one Pallas pass per "
+                         "local step, every preconditioner kind (DESIGN.md "
+                         "§7; bit-identical in fp32)")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log", default="")
@@ -108,6 +112,7 @@ def main(argv=None):
                          scaling=args.scaling,
                          participation=args.participation,
                          sync_dtype=args.sync_dtype,
+                         use_fused_kernel=args.use_fused_kernel,
                          compression=comp, local_steps=local_steps,
                          asynchrony=asy)
         spec = savic.engine_spec(pc, sv)
@@ -118,7 +123,8 @@ def main(argv=None):
             tau=args.tau, server_beta1=args.server_beta1,
             participation=args.participation,
             sync_dtype=args.sync_dtype, compression=comp,
-            local_steps=local_steps, asynchrony=asy)
+            local_steps=local_steps, asynchrony=asy,
+            use_fused_kernel=args.use_fused_kernel)
     round_step = jax.jit(engine.build_round_step(model.loss, spec))
     wire = engine.bytes_on_wire(spec, jax.eval_shape(model.init,
                                                      jax.random.PRNGKey(0)))

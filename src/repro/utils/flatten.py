@@ -1,0 +1,88 @@
+"""Flat-buffer view of a client-state pytree (DESIGN.md §7).
+
+The fused client loop runs H local steps per round on buffers shaped
+``(M, n_total)`` — every params/momentum/D leaf reshaped and concatenated into
+one contiguous fp32 buffer per client — so the whole optimizer update is ONE
+Pallas pass per local step instead of one launch per leaf.  ``FlatLayout``
+records the leaf order, shapes, sizes and offsets of that view so the tree can
+be reconstructed bit-exactly at the sync barrier (flatten at round start,
+unflatten only at sync).
+
+Flatten/unflatten are pure reshape+concatenate / slice+reshape — values are
+never touched, which is what makes the flat path bit-identical to the tree
+path (pinned in tests/test_fused_step.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import tree_paths
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Layout of a pytree flattened into one trailing ``(n_total,)`` axis.
+
+    Built from a *single-replica* tree (arrays or ShapeDtypeStructs, no
+    leading client dim); ``flatten``/``unflatten`` then accept trees whose
+    leaves carry ``batch_dims`` extra leading axes (the client dim M in the
+    engine) which are preserved as leading axes of the flat buffer.
+    """
+    treedef: jax.tree_util.PyTreeDef
+    paths: tuple          # '/'-joined key path per leaf, flatten order
+    shapes: tuple         # single-replica shape per leaf
+    sizes: tuple          # element count per leaf
+    offsets: tuple        # start offset of each leaf in the flat axis
+    n_total: int
+
+    @classmethod
+    def for_tree(cls, tree, batch_dims: int = 0) -> "FlatLayout":
+        """Derive the layout; ``batch_dims`` leading axes are ignored."""
+        paths, shapes, sizes, offsets = [], [], [], []
+        off = 0
+        for path, leaf in tree_paths(tree):
+            shape = tuple(leaf.shape[batch_dims:])
+            size = int(np.prod(shape)) if shape else 1
+            paths.append(path)
+            shapes.append(shape)
+            sizes.append(size)
+            offsets.append(off)
+            off += size
+        return cls(treedef=jax.tree.structure(tree), paths=tuple(paths),
+                   shapes=tuple(shapes), sizes=tuple(sizes),
+                   offsets=tuple(offsets), n_total=off)
+
+    def flatten(self, tree, batch_dims: int = 0):
+        """Tree with ``batch_dims`` leading axes -> fp32 ``(*batch, n_total)``."""
+        leaves = jax.tree.leaves(tree)
+        flat = [l.reshape(l.shape[:batch_dims] + (-1,)).astype(jnp.float32)
+                for l in leaves]
+        return jnp.concatenate(flat, axis=-1)
+
+    def unflatten(self, buf, batch_dims: int = 0):
+        """``(*batch, n_total)`` -> the tree (leaves cast back per-layout fp32
+        — the fast path only engages for fp32 state, so this is exact)."""
+        batch = buf.shape[:batch_dims]
+        leaves = [buf[..., o:o + s].reshape(batch + shp)
+                  for o, s, shp in zip(self.offsets, self.sizes, self.shapes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def describe(self) -> dict:
+        """JSON-able summary for BuiltStep meta / dry-run artifacts."""
+        return {
+            "n_total": self.n_total,
+            "leaves": [
+                {"path": p, "shape": list(s), "size": sz, "offset": o}
+                for p, s, sz, o in zip(self.paths, self.shapes, self.sizes,
+                                       self.offsets)
+            ],
+        }
+
+
+def all_float32(tree) -> bool:
+    """True iff every leaf is fp32 — the fused fast path's dtype gate."""
+    return all(l.dtype == jnp.float32 for l in jax.tree.leaves(tree))

@@ -144,3 +144,84 @@ def test_bounds_reporting():
     lo, hi = bounds(cfg, state)
     assert float(lo) >= 0.01 - 1e-8
     assert float(hi) <= np.sqrt(0.999 + 0.001 * 16.0) + 1e-5
+
+
+# --------------------------------------------------------------------------- #
+# Lemma 1 bounds THROUGH the fused flat-buffer kernel (DESIGN.md §7): the
+# same α ≤ D̂ ≤ Γ' invariant when D evolves inside fused_local_step — rule-2
+# (in-kernel grad² stat), rule-3 with NEGATIVE Hutchinson stats, and the
+# clip="add" branch (previously untested)
+# --------------------------------------------------------------------------- #
+
+
+def _fused_d_evolution(cfg: PrecondConfig, stats, d0):
+    """Evolve d with the FUSED kernel (stats (T, M, n); external for rule-3 /
+    Hutchinson, in-kernel g² for rule-2) and return the final d buffer."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    M, n = stats.shape[1:]
+    p = jnp.zeros((M, n))
+    m = jnp.zeros((M, n))
+    d = jnp.asarray(d0, jnp.float32)
+    for step, h in enumerate(stats):
+        t = jnp.full((M,), step, jnp.int32)
+        if cfg.uses_hutchinson or cfg.rule == "linear":
+            g, hstat = jnp.zeros((M, n)), jnp.asarray(h, jnp.float32)
+        else:
+            # rule-2 in-kernel stat: the kernel squares g itself
+            g, hstat = jnp.sqrt(jnp.asarray(h, jnp.float32)), None
+        p, m, d = ops.fused_local_step(
+            p, m, g, d, hstat, t, None, gamma=0.0, beta1=0.0,
+            alpha=cfg.alpha, beta2=cfg.beta2, kind=cfg.kind, clip=cfg.clip,
+            schedule=cfg.schedule, update_d=True)
+    return d
+
+
+def _assert_lemma1(cfg: PrecondConfig, d, gamma_cap):
+    """α ≤ D̂ ≤ Γ' (+α for the "add" clip), via preconditioner.bounds."""
+    state = {"d": _tree(np.asarray(d[0])), "t": np.int32(1)}
+    lo, hi = bounds(cfg, state)
+    cap = max(gamma_cap, 1.0)
+    if cfg.clip == "add":
+        assert float(lo) >= cfg.alpha - 1e-7
+        assert float(hi) <= cap + cfg.alpha + 1e-4
+    else:
+        assert float(lo) >= cfg.alpha - 1e-7
+        assert float(hi) <= cap + 1e-4
+
+
+@pytest.mark.parametrize("kind,clip", [("adam", "max"), ("adam", "add"),
+                                       ("rmsprop", "max"), ("rmsprop", "add"),
+                                       ("oasis", "max"), ("oasis", "add")])
+def test_lemma1_bounds_through_fused_updates(kind, clip):
+    """Deterministic: |H| ≤ Γ elementwise keeps D̂ in [α, Γ'] through fused
+    kernel updates — including OASIS driven by NEGATIVE Hutchinson stats and
+    the additive rule-4 clip."""
+    alpha, Gamma, n, T = 0.05, 3.0, 48, 8
+    # fast EMA (β₂ = 0.5) so the signed rule-3 state actually goes negative
+    # within T steps; Lemma 1's bound is β-independent
+    cfg = PrecondConfig(kind=kind, alpha=alpha, clip=clip, beta2=0.5)
+    rng = np.random.default_rng(1)
+    raw = rng.uniform(-Gamma, Gamma, size=(T, 1, n)).astype(np.float32)
+    stats = raw if cfg.rule == "linear" else raw ** 2   # rule-2 wants H²
+    d = _fused_d_evolution(cfg, stats, np.ones((1, n), np.float32))
+    if cfg.rule == "linear":
+        assert float(np.min(np.asarray(d))) < 0.0   # signed D really occurs
+    _assert_lemma1(cfg, d, Gamma)
+
+
+@settings(max_examples=20, deadline=None)
+@given(kind=st.sampled_from(["adam", "oasis"]),
+       clip=st.sampled_from(["max", "add"]),
+       alpha=st.floats(1e-4, 1e-1), gamma_cap=st.floats(0.5, 20.0),
+       steps=st.integers(1, 6), seed=st.integers(0, 99))
+def test_lemma1_bounds_through_fused_updates_property(kind, clip, alpha,
+                                                      gamma_cap, steps, seed):
+    cfg = PrecondConfig(kind=kind, alpha=alpha, clip=clip)
+    rng = np.random.default_rng(seed)
+    raw = rng.uniform(-gamma_cap, gamma_cap,
+                      size=(steps, 1, 16)).astype(np.float32)
+    stats = raw if cfg.rule == "linear" else raw ** 2
+    d = _fused_d_evolution(cfg, stats, np.ones((1, 16), np.float32))
+    _assert_lemma1(cfg, d, gamma_cap)
