@@ -12,7 +12,10 @@ configuration of three orthogonal layers:
     or locally-scaled via ``preconditioner.py``. With ``use_fused_kernel`` the
     whole client state rides as per-client flat fp32 buffers and each local
     step is ONE fused Pallas pass (``kernels.ops.fused_local_step``) for every
-    D̂ rule — bit-identical (fp32) to the tree path (DESIGN.md §7).
+    D̂ rule — bit-identical (fp32) to the tree path (DESIGN.md §7). On
+    model-/FSDP-sharded plans the launch layer supplies a ``ShardedFlatPlan``
+    and the same loop runs per shard via ``shard_map`` (per-device flat
+    blocks; zero flat-buffer collectives).
   * **SyncStrategy** — the only cross-client traffic per round: full mean,
     weighted partial participation (FedAvg-style client sampling), quantized
     ``sync_dtype`` all-reduce, and a pluggable delta **compression** layer
@@ -427,7 +430,7 @@ def _apply_update(params, mom, grads, pstate, spec: EngineSpec):
     return params, mom
 
 
-def _client_loop(loss_fn, grad_fn, spec: EngineSpec):
+def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None):
     """H local steps, vmap-over-M inside a lax.scan over H.
 
     Returns ``run(params_m, mom_m, pstate, micro, keys) ->
@@ -496,11 +499,74 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec):
         return params_m, mom_m, pstate, last_grads, losses
 
     if cl.use_fused_kernel:
-        return local_step_one_client, _fused_run(loss_fn, grad_fn, spec, run)
+        return local_step_one_client, _fused_run(loss_fn, grad_fn, spec, run,
+                                                 shard_plan)
     return local_step_one_client, run
 
 
-def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run):
+def _local_flat_ops(params_m, local):
+    """Flat ops of the client-parallel fast path: one global ``FlatLayout``
+    (replicated leaves within a client) and the bare fused kernel."""
+    from repro.kernels import ops as kops
+    layout = FlatLayout.for_tree(params_m, batch_dims=1)
+    flat_m = lambda t: layout.flatten(t, batch_dims=1)
+    unflat_m = lambda b: layout.unflatten(b, batch_dims=1)
+    bd = 1 if local else 0
+    flat_d = lambda t: layout.flatten(t, batch_dims=bd)
+    unflat_d = lambda b: layout.unflatten(b, batch_dims=bd)
+    return flat_m, unflat_m, flat_d, unflat_d, kops.fused_local_step
+
+
+def _shard_flat_ops(plan, local):
+    """Flat ops of the shard-mapped fast path (DESIGN.md §7): per-shard flat
+    buffers over the plan's model/FSDP axes, flatten/unflatten and the fused
+    kernel all inside ``shard_map`` (in_specs == out_specs == the storage
+    shardings, so no resharding collective can appear in the local step).
+    The client axis keeps its tree-path semantics: the M dim rides the plan's
+    client entry; per-client ``t`` is sharded over it."""
+    from jax.experimental.shard_map import shard_map
+    from repro.kernels import ops as kops
+    mesh, lay, cl_entry = plan.mesh, plan.layout, plan.client
+    lead_m = (cl_entry,)
+    lead_d = lead_m if local else ()
+    flat_m = lambda t: lay.flatten(t, mesh, lead=lead_m)
+    unflat_m = lambda b: lay.unflatten(b, mesh, lead=lead_m)
+    flat_d = lambda t: lay.flatten(t, mesh, lead=lead_d)
+    unflat_d = lambda b: lay.unflatten(b, mesh, lead=lead_d)
+    fs_m = lay.flat_spec(lead_m)
+
+    def fused_step(p, m, g, d=None, h=None, t=None, s=None, **kw):
+        update_d = kw.get("update_d", False)
+        operands, in_specs = [p, m, g], [fs_m, fs_m, fs_m]
+        if d is not None:
+            operands.append(d)
+            in_specs.append(fs_m if d.ndim == 2 else lay.flat_spec(()))
+        if h is not None:
+            operands.append(h)
+            in_specs.append(fs_m)
+        if t is not None:
+            operands.append(t)
+            in_specs.append(jax.sharding.PartitionSpec(cl_entry))
+        flags = (d is not None, h is not None, t is not None)
+
+        def body(*args):
+            it = iter(args)
+            p_, m_, g_ = next(it), next(it), next(it)
+            d_ = next(it) if flags[0] else None
+            h_ = next(it) if flags[1] else None
+            t_ = next(it) if flags[2] else None
+            po, mo, do = kops.fused_local_step(p_, m_, g_, d_, h_, t_, s, **kw)
+            return (po, mo, do) if update_d else (po, mo)
+
+        out_specs = (fs_m,) * (3 if update_d else 2)
+        outs = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=out_specs, check_rep=False)(*operands)
+        return outs[0], outs[1], (outs[2] if update_d else None)
+
+    return flat_m, unflat_m, flat_d, unflat_d, fused_step
+
+
+def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None):
     """The flat-buffer fused client loop (DESIGN.md §7).
 
     Same contract as the tree ``run``, but the whole client state rides as
@@ -513,6 +579,14 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run):
     to the tree path for every kind × schedule × clip and all six METHODS
     (pinned in tests/test_fused_step.py); non-fp32 client state falls back to
     the tree path (the flat view is an fp32 buffer by contract).
+
+    With ``shard_plan`` (a ``utils.flatten.ShardedFlatPlan``, built by the
+    launch layer from the plan's NamedShardings) the SAME loop runs per model
+    shard: flat buffers become the shard-major per-device blocks of
+    ``ShardFlatLayout`` and flatten / the kernel / unflatten run inside
+    ``shard_map`` over the plan's model/FSDP axes, so the fast path serves
+    model-/FSDP-sharded plans with zero flat-buffer collectives (pinned in
+    tests/test_fused_sharded.py).
     """
     cl, pc = spec.client, spec.precond
     has_d = pc.kind != "identity"
@@ -526,15 +600,14 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run):
         H = jax.tree.leaves(micro)[0].shape[0]
         M = jax.tree.leaves(params_m)[0].shape[0]
         masked = _needs_masking(cl, H, M)
-        layout = FlatLayout.for_tree(params_m, batch_dims=1)
-        from repro.kernels import ops as kops
+        flat_m, unflat_m, flat_d, unflat_d, fused_step = \
+            _shard_flat_ops(shard_plan, local) if shard_plan is not None \
+            else _local_flat_ops(params_m, local)
 
-        carry0 = {"p": layout.flatten(params_m, batch_dims=1),
-                  "m": layout.flatten(mom_m, batch_dims=1)}
+        carry0 = {"p": flat_m(params_m), "m": flat_m(mom_m)}
         carry0["g"] = jnp.zeros_like(carry0["p"])     # carried sync grads
         if has_d:
-            carry0["d"] = layout.flatten(pstate["d"],
-                                         batch_dims=1 if local else 0)
+            carry0["d"] = flat_d(pstate["d"])
         if local:
             carry0["t"] = pstate["t"]                 # per-client (M,) i32
 
@@ -544,19 +617,19 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run):
                 active = h_idx < jnp.asarray(cl.local_steps, jnp.int32)
             else:
                 micro_m, ks = xs
-            params_tree = layout.unflatten(carry["p"], batch_dims=1)
+            params_tree = unflat_m(carry["p"])
             losses, grads = jax.vmap(grad_fn)(params_tree, micro_m)
             if cl.grad_clip:
                 # tree-level clip, exactly as the tree path: the CLIPPED
                 # grads are what the carry freezes for the sync-time D stat
                 grads = jax.vmap(lambda gt: _clip(gt, cl.grad_clip))(grads)
-            G = layout.flatten(grads, batch_dims=1)
+            G = flat_m(grads)
             hstat = None
             if local and pc.uses_hutchinson:
                 stats = jax.vmap(lambda p_, mc, k_: PC.hutchinson_diag(
                     loss_fn, p_, mc, k_))(params_tree, micro_m, ks)
-                hstat = layout.flatten(stats, batch_dims=1)
-            p_new, m_new, d_new = kops.fused_local_step(
+                hstat = flat_m(stats)
+            p_new, m_new, d_new = fused_step(
                 carry["p"], carry["m"], G, carry.get("d"), hstat,
                 carry.get("t"), None, gamma=cl.lr, beta1=cl.momentum,
                 weight_decay=cl.weight_decay, alpha=pc.alpha, beta2=pc.beta2,
@@ -578,12 +651,11 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run):
         xs = (micro, keys, jnp.arange(H, dtype=jnp.int32)) if masked \
             else (micro, keys)
         carry, losses = jax.lax.scan(scan_body, carry0, xs)
-        params_m = layout.unflatten(carry["p"], batch_dims=1)
-        mom_m = layout.unflatten(carry["m"], batch_dims=1)
-        last_grads = layout.unflatten(carry["g"], batch_dims=1)
+        params_m = unflat_m(carry["p"])
+        mom_m = unflat_m(carry["m"])
+        last_grads = unflat_m(carry["g"])
         if local:
-            pstate = {"d": layout.unflatten(carry["d"], batch_dims=1),
-                      "t": carry["t"]}
+            pstate = {"d": unflat_d(carry["d"]), "t": carry["t"]}
         return params_m, mom_m, pstate, last_grads, losses
 
     return run
@@ -828,17 +900,22 @@ def _adaptive_server_update(spec: ServerSpec, server, x_prev, delta):
 # --------------------------------------------------------------------------- #
 
 
-def build_round_step(loss_fn: Callable, spec: EngineSpec):
+def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
     """loss_fn(params, microbatch) -> scalar.
 
     Returns ``round_step(state, batch, key)`` where each batch leaf is
     (M, H, ...): H microbatches per client per round. Returns (state, metrics).
     Metrics: loss, loss_per_client, client_drift (+ step_norm for adaptive
     servers).
+
+    ``shard_plan`` (optional ``utils.flatten.ShardedFlatPlan``) switches the
+    ``use_fused_kernel`` fast path onto per-shard flat buffers via
+    ``shard_map`` — the launch layer builds it for model-/FSDP-sharded plans
+    (DESIGN.md §7); it is ignored when the client loop is unfused.
     """
     grad_fn = jax.value_and_grad(loss_fn)
     cl, sy, sv, pc = spec.client, spec.sync, spec.server, spec.precond
-    _, client_run = _client_loop(loss_fn, grad_fn, spec)
+    _, client_run = _client_loop(loss_fn, grad_fn, spec, shard_plan)
 
     def round_step(state, batch, key):
         M = jax.tree.leaves(state["params"])[0].shape[0]

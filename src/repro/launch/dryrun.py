@@ -120,7 +120,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             # fused flat-buffer client loop (DESIGN.md §7): the in-round
             # flat-view layout the scan runs over
             rec["flat_layout"] = built.meta["flat_layout"]
+        if "flat_layout_sharded" in built.meta:
+            # shard-mapped fused path (model-/FSDP-sharded plans): the
+            # per-shard flat layout — each device's (M, n_local) block
+            rec["flat_layout_sharded"] = built.meta["flat_layout_sharded"]
         if "fused_kernel_fallback" in built.meta:
+            # only genuinely ineligible builds fall back now (non-fp32
+            # client state); sharded plans take the shard_map fast path
             rec["fused_kernel_fallback"] = built.meta["fused_kernel_fallback"]
         hs = spec.client.local_steps
         rec["heterogeneity"] = {

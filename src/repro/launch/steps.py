@@ -142,22 +142,6 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
         spec = dataclasses.replace(
             spec, client=dataclasses.replace(spec.client,
                                              use_fused_kernel=True))
-    if spec.client.use_fused_kernel and (_ax(mesh, plan.model) > 1
-                                         or plan.fsdp_params):
-        # GSPMD cannot lay the flat (M, n_total) view over model-/FSDP-sharded
-        # leaves without resharding the full client state EVERY local step
-        # (measured: ~4e5× collective-byte blowup on the 16×16 mesh) — take
-        # the tree path; per-shard flat views need shard_map (DESIGN.md §7)
-        spec = dataclasses.replace(
-            spec, client=dataclasses.replace(spec.client,
-                                             use_fused_kernel=False))
-        het_meta["fused_kernel_fallback"] = "model-sharded params (flat view " \
-                                            "needs replicated-leaf clients)"
-    round_step = engine.build_round_step(model.loss, spec)
-
-    def step(state, batch):
-        key = jax.random.fold_in(jax.random.PRNGKey(0), state["round"])
-        return round_step(state, batch, key)
 
     # ---- abstract state & batch ----------------------------------------------
     state_shape = jax.eval_shape(
@@ -167,13 +151,48 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     batch_shape = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((M, H) + s.shape, s.dtype), micro)
 
+    shard_plan = None
     if spec.client.use_fused_kernel:
-        # record the in-round flat-view layout (DESIGN.md §7): the state
-        # pytree, shardings and donation below are the tree path's — the
-        # flat buffer exists only between round start and the sync barrier
-        from repro.utils.flatten import FlatLayout
-        het_meta["flat_layout"] = FlatLayout.for_tree(
-            state_shape["params"], batch_dims=1).describe()
+        bad = _fused_non_fp32(state_shape, spec)
+        if bad:
+            # genuinely ineligible: the flat view is an fp32 buffer by
+            # contract — take the (identical-semantics) tree path
+            spec = dataclasses.replace(
+                spec, client=dataclasses.replace(spec.client,
+                                                 use_fused_kernel=False))
+            het_meta["fused_kernel_fallback"] = \
+                f"non-fp32 client state ({bad}; flat view is fp32 by contract)"
+        elif _ax(mesh, plan.model) > 1 or plan.fsdp_params:
+            # model-/FSDP-sharded plan: the single global flat view would make
+            # GSPMD reshard the whole client state EVERY local step (measured
+            # ~4e5× collective-byte blowup on the 16×16 mesh) — instead run
+            # the fused step PER SHARD via shard_map (DESIGN.md §7): each
+            # device flattens only its local leaf shards; state pytree,
+            # shardings and donation below stay the tree path's
+            from repro.utils.flatten import ShardedFlatPlan
+            shard_axes = tuple(plan.model) + (tuple(plan.batch)
+                                              if plan.fsdp_params else ())
+            params_one = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                state_shape["params"])
+            pspecs_one = params_pspecs(cfg, params_one, mesh, plan,
+                                       client_dim=False)
+            shard_plan = ShardedFlatPlan.build(
+                mesh, params_one, pspecs_one, shard_axes,
+                client=tuple(plan.client) if plan.client else None)
+            het_meta["flat_layout_sharded"] = shard_plan.layout.describe()
+        else:
+            # client-parallel plan (replicated leaves within a client): the
+            # original single flat view; layout recorded for dry-run artifacts
+            from repro.utils.flatten import FlatLayout
+            het_meta["flat_layout"] = FlatLayout.for_tree(
+                state_shape["params"], batch_dims=1).describe()
+    round_step = engine.build_round_step(model.loss, spec,
+                                         shard_plan=shard_plan)
+
+    def step(state, batch):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), state["round"])
+        return round_step(state, batch, key)
 
     # ---- shardings (see DESIGN.md §2) ----------------------------------------
     state_spec = _engine_state_spec(cfg, state_shape, mesh, plan, spec)
@@ -194,6 +213,24 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
               "b_client": b_client, "cfg": cfg, "plan": plan,
               "engine_spec": spec, **het_meta},
     )
+
+
+def _fused_non_fp32(state_shape, spec: engine.EngineSpec) -> str:
+    """Name the first non-fp32 fused-client-state leaf group, or "".
+
+    Mirrors the engine's trace-time ``all_float32`` gate (DESIGN.md §7) so the
+    launch layer can record WHY a build fell back to the tree path — the meta
+    contract asserted in tests/test_system.py.
+    """
+    from repro.utils.flatten import all_float32
+    for name in ("params", "mom"):
+        if not all_float32(state_shape[name]):
+            return name
+    if "d" in state_shape["precond"] \
+            and spec.precond.kind != "identity" \
+            and not all_float32(state_shape["precond"]["d"]):
+        return "precond.d"
+    return ""
 
 
 def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):

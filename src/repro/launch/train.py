@@ -84,7 +84,10 @@ def main(argv=None):
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="flat-buffer fused client loop: one Pallas pass per "
                          "local step, every preconditioner kind (DESIGN.md "
-                         "§7; bit-identical in fp32)")
+                         "§7; bit-identical in fp32). On mesh launches "
+                         "(steps.py) model-/FSDP-sharded plans run it "
+                         "per-shard via shard_map; this single-host driver "
+                         "uses the unsharded flat view")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log", default="")

@@ -1,0 +1,266 @@
+"""Shard-mapped fused local step — the multi-device differential suite
+(DESIGN.md §7, per-shard flat contract).
+
+Two layers:
+
+  * in-process (tier-1): ``ShardFlatLayout`` boundary behavior — uneven leaf
+    splits (dim % shard count ∈ {0, 1, shards−1}), a leaf smaller than one
+    shard, multi-axis entries, round-trip flatten/unflatten properties
+    (deterministic + hypothesis via the _hypothesis_compat shim) — plus the
+    degenerate 1-device shard_map engine path pinned bitwise against the
+    unsharded fused and tree paths.
+  * subprocess (tier-2 @slow; 8 host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, same pattern as
+    tests/_sharding_worker.py): tests/_fused_sharded_worker.py pins the
+    shard-mapped fused path BITWISE (fp32) against the live tree path and the
+    verbatim pre-PR engine snapshot (tests/_reference_engine.py) for all six
+    METHODS on model-, FSDP-, and mixed client×model plans, the H_m masking
+    composition, the shard_map flatten/unflatten against the mesh-free
+    reference, and the HLO collective pins: the per-step flat program carries
+    ZERO collective bytes (the resharding blowup that motivated the old
+    launch-layer gate can never silently return) while the naive global flat
+    view measurably reshards.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from _hypothesis_compat import given, settings, st
+from repro.core import engine
+from repro.utils.flatten import FlatLayout, ShardedFlatPlan, ShardFlatLayout
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _worker(mode: str, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
+        + os.path.join(ROOT, "tests")
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "_fused_sharded_worker.py"), mode],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert f"ALL-OK {mode}" in r.stdout
+    return r.stdout
+
+
+# --------------------------------------------------------------------------- #
+# ShardFlatLayout boundaries (in-process; layout + reference ops are mesh-free)
+# --------------------------------------------------------------------------- #
+
+
+MESH_SHAPE = {"model": 4, "data": 2}
+
+
+def _rand_tree(shapes, lead=(), seed=0):
+    k = jax.random.key(seed)
+    return {name: jax.random.normal(jax.random.fold_in(k, i), lead + shp)
+            for i, (name, shp) in enumerate(shapes.items())}
+
+
+@pytest.mark.parametrize("dim,split", [
+    (12, True),    # dim % shards == 0: split, local extent 3
+    (13, False),   # dim % shards == 1: uneven -> replicated fallback
+    (15, False),   # dim % shards == shards-1: uneven -> replicated fallback
+])
+def test_uneven_leaf_splits(dim, split):
+    tree = _rand_tree({"w": (dim,)})
+    lay = ShardFlatLayout.for_tree(tree, {"w": P("model")}, MESH_SHAPE,
+                                   ("model",))
+    leaf = lay.describe()["leaves"][0]
+    assert leaf["split"] == split
+    assert leaf["uneven_fallback"] == (not split)
+    assert lay.n_local == (dim // 4 if split else dim)
+    assert lay.n_flat == 4 * lay.n_local
+    back = lay.unflatten_ref(lay.flatten_ref(tree))
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_leaf_smaller_than_one_shard():
+    """A (2,) leaf under 4 shards cannot split: it rides replicated in every
+    shard block, exactly as GSPMD keeps such leaves per device."""
+    tree = _rand_tree({"w": (12,), "tiny": (2,)})
+    lay = ShardFlatLayout.for_tree(tree, {"w": P("model"), "tiny": P("model")},
+                                   MESH_SHAPE, ("model",))
+    desc = {l["path"]: l for l in lay.describe()["leaves"]}
+    assert desc["tiny"]["uneven_fallback"] and not desc["tiny"]["split"]
+    assert lay.n_local == 12 // 4 + 2
+    back = lay.unflatten_ref(lay.flatten_ref(tree))
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_multi_axis_entry_and_dim1_split():
+    """P(('data', 'model')) splits a dim over both axes (major-first), and a
+    dim-1 split leaves dim 0 intact — with batch dims preserved."""
+    tree = _rand_tree({"a": (3, 16), "b": (16, 5)}, lead=(2,))
+    specs = {"a": P(None, ("data", "model")), "b": P("model", None)}
+    lay = ShardFlatLayout.for_tree(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                     tree), specs, MESH_SHAPE, ("data", "model"))
+    desc = {l["path"]: l for l in lay.describe()["leaves"]}
+    assert desc["a"]["local_shape"] == [3, 2]     # 16 / (2*4)
+    assert desc["b"]["local_shape"] == [4, 5]     # 16 / 4, 'data' untouched
+    assert lay.n_shards == 8
+    buf = lay.flatten_ref(tree, batch_dims=1)
+    assert buf.shape == (2, lay.n_flat)
+    back = lay.unflatten_ref(buf, batch_dims=1)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_single_shard_degenerates_to_flat_layout():
+    """n_shards == 1 (all extents 1): the shard-local view IS the global flat
+    view — same n_total, same content order."""
+    tree = _rand_tree({"w": (7, 3), "b": (5,)})
+    lay = ShardFlatLayout.for_tree(tree, {"w": P(None, "model"), "b": P()},
+                                   {"model": 1}, ("model",))
+    flat = FlatLayout.for_tree(tree)
+    assert lay.n_shards == 1 and lay.n_flat == flat.n_total
+    np.testing.assert_array_equal(np.asarray(lay.flatten_ref(tree)),
+                                  np.asarray(flat.flatten(tree)))
+
+
+def test_alien_axis_rejected():
+    tree = _rand_tree({"w": (8,)})
+    with pytest.raises(ValueError, match="outside the shard axes"):
+        ShardFlatLayout.for_tree(tree, {"w": P("data")}, MESH_SHAPE,
+                                 ("model",))
+
+
+def test_spec_leaf_count_mismatch_rejected():
+    tree = _rand_tree({"w": (8,), "b": (3,)})
+    with pytest.raises(ValueError, match="leaves"):
+        ShardFlatLayout.for_tree(tree, {"w": P("model")}, MESH_SHAPE,
+                                 ("model",))
+
+
+@given(st.lists(st.tuples(st.integers(1, 24), st.booleans()), min_size=1,
+                max_size=5),
+       st.integers(min_value=1, max_value=4), st.integers(0, 99))
+@settings(max_examples=25, deadline=None)
+def test_shard_flat_round_trip_property(dims, shards, seed):
+    """Any mix of split/uneven/replicated 1-D leaves round-trips bitwise
+    through the shard-local flat view, for any shard count."""
+    shapes = {f"l{i}": (d,) for i, (d, _) in enumerate(dims)}
+    specs = {f"l{i}": (P("model") if want else P())
+             for i, (_, want) in enumerate(dims)}
+    tree = _rand_tree(shapes, seed=seed)
+    lay = ShardFlatLayout.for_tree(tree, specs, {"model": shards}, ("model",))
+    buf = lay.flatten_ref(tree)
+    assert buf.shape == (lay.n_flat,)
+    back = lay.unflatten_ref(buf)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+# --------------------------------------------------------------------------- #
+# degenerate 1-device shard_map engine path (tier-1 guard for the real thing)
+# --------------------------------------------------------------------------- #
+
+
+def _quad_problem():
+    from repro.data import QuadraticProblem
+    return QuadraticProblem.make(d=24, M=4, mu=0.5, L=5.0, sigma=0.3, seed=0)
+
+
+def _run_engine(problem, spec, shard_plan=None, rounds=3, H=3, n_clients=4):
+    from repro.data import QuadraticLoader
+    Q = jnp.asarray(problem.Q, jnp.float32)
+    b = jnp.asarray(problem.b, jnp.float32)
+
+    def loss(params, micro):
+        x = params["x"]
+        return 0.5 * (x - b[0]) @ Q[0] @ (x - b[0]) + micro["z"] @ x
+
+    step = jax.jit(engine.build_round_step(loss, spec, shard_plan))
+    state = engine.init_state(jax.random.PRNGKey(0),
+                              lambda k: {"x": jnp.zeros(24)}, spec, n_clients)
+    loader = QuadraticLoader(problem, seed=0)
+    key = jax.random.PRNGKey(1)
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        state, met = step(state, jax.tree.map(jnp.asarray,
+                                              loader.round_batch(H)), k)
+    return state, met
+
+
+@pytest.mark.parametrize("method", ["savic", "fedadam", "local-adam"])
+def test_one_device_shard_plan_bitwise(method):
+    """The shard_map code path itself (flatten/kernel/unflatten inside
+    shard_map) on a 1-device mesh: bitwise vs the unsharded fused path and
+    the tree path — the in-process guard for the 8-device worker suite."""
+    problem = _quad_problem()
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    params_one = {"x": jax.ShapeDtypeStruct((24,), jnp.float32)}
+    plan = ShardedFlatPlan.build(mesh, params_one, {"x": P("model")},
+                                 ("model",), client=("data",))
+    kw = dict(gamma=0.01, alpha=1e-2, eta_l=0.01, eta=0.05)
+    spec_f = engine.method_spec(method, **kw, use_fused_kernel=True)
+    spec_u = engine.method_spec(method, **kw)
+    st_s, met_s = _run_engine(problem, spec_f, shard_plan=plan)
+    st_f, met_f = _run_engine(problem, spec_f)
+    st_u, met_u = _run_engine(problem, spec_u)
+    for st_b in (st_f, st_u):
+        np.testing.assert_array_equal(np.asarray(st_s["params"]["x"]),
+                                      np.asarray(st_b["params"]["x"]))
+        np.testing.assert_array_equal(np.asarray(st_s["mom"]["x"]),
+                                      np.asarray(st_b["mom"]["x"]))
+        if "d" in st_b["precond"]:
+            np.testing.assert_array_equal(
+                np.asarray(st_s["precond"]["d"]["x"]),
+                np.asarray(st_b["precond"]["d"]["x"]))
+    assert float(met_s["loss"]) == float(met_f["loss"]) == float(met_u["loss"])
+
+
+# --------------------------------------------------------------------------- #
+# the 8-device subprocess suite (tier-2)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+def test_sharded_differential_fast():
+    """Representative slice: flatten-oracle pins + {savic, fedadam,
+    local-adam} on the mixed client×model plan, bitwise."""
+    _worker("fast")
+
+
+@pytest.mark.slow
+def test_sharded_differential_full_matrix():
+    """Acceptance sweep: all six METHODS × {model, fsdp, mixed} plans,
+    shard-mapped fused vs tree vs pre-PR reference, bitwise."""
+    out = _worker("full", timeout=1200)
+    for method in engine.METHODS:
+        for plan in ("model", "fsdp", "mixed"):
+            assert f"OK diff {plan}/{method}" in out
+
+
+@pytest.mark.slow
+def test_sharded_hlo_collective_pins():
+    """HLO regression: the per-local-step program under a sharded plan
+    contains NO collective touching the flat buffers (pinned at exactly 0
+    bytes), the fused round program moves exactly the tree path's collective
+    bytes (sync traffic only), and the naive global flat view — the measured
+    blowup that motivated the old launch-layer gate — still reshards (> 0
+    bytes per step), so the regression can never silently return."""
+    out = _worker("hlo")
+    rec = json.loads([l for l in out.splitlines()
+                      if l.startswith("RESULT ")][0][len("RESULT "):])
+    assert rec["step_collective_bytes_sharded"] == 0
+    assert rec["step_collective_by_kind_sharded"] == {}
+    assert rec["step_collective_bytes_naive"] > 0
+    assert rec["round_collective_bytes_fused"] \
+        == rec["round_collective_bytes_tree"]

@@ -457,10 +457,13 @@ def test_build_train_step_records_flat_layout():
     assert built_f.donate == built_u.donate == (0,)
 
 
-def test_build_train_step_sharded_params_fall_back_to_tree_path():
-    """The launch-layer sharding gate (DESIGN.md §7): a plan that shards
-    params within a client (here plain-mode FSDP) strips the fused fast path
-    — the flat view would force per-step reshards — and records why."""
+def test_build_train_step_sharded_params_take_shard_mapped_path():
+    """The launch layer no longer strips the fused path on sharded plans
+    (DESIGN.md §7): a plan that shards params within a client (here
+    plain-mode FSDP) keeps ``use_fused_kernel`` and runs the fused step per
+    shard via shard_map, recording the per-shard flat layout instead of a
+    fallback (the full multi-device contract lives in
+    tests/test_fused_sharded.py)."""
     from jax.sharding import Mesh
 
     from repro.configs import ShapeConfig
@@ -472,6 +475,14 @@ def test_build_train_step_sharded_params_fall_back_to_tree_path():
     built = build_train_step("qwen2-0.5b", shape, mesh, method="fedadam",
                              mode="plain", reduced=True, h_local=2,
                              use_fused_kernel=True)
-    assert not built.meta["engine_spec"].client.use_fused_kernel
-    assert "fused_kernel_fallback" in built.meta
+    assert built.meta["engine_spec"].client.use_fused_kernel
+    assert "fused_kernel_fallback" not in built.meta
     assert "flat_layout" not in built.meta
+    lay = built.meta["flat_layout_sharded"]
+    # plain mode on this 1x1 mesh: FSDP over ('model', 'data') extents 1 —
+    # every leaf degenerates to one replicated shard block
+    assert lay["n_shards"] == 1
+    state_shape = built.args[0]
+    n_params = sum(int(np.prod(s.shape[1:]))
+                   for s in jax.tree.leaves(state_shape["params"]))
+    assert lay["n_flat"] == n_params
