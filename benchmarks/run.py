@@ -33,6 +33,11 @@ under results/bench/.
               pipeline (~0) vs the naive global flat view's reshard blowup on
               model-/FSDP-/mixed-sharded plans; writes BENCH_kernels.json at
               the repo root.
+  serve       production decode path: prefill-cache reuse vs prompt replay
+              (TTFT, phase timings), steady-state decode tok/s with p50/p99
+              per-token latency, and continuous vs static batching on the
+              same Poisson arrival trace; writes BENCH_serve.json at the
+              repo root.
 """
 from __future__ import annotations
 
@@ -548,6 +553,84 @@ def bench_async(rounds=30, H=6, M=8, seed=0):
 
 
 # --------------------------------------------------------------------------- #
+# serve — production decode path -> BENCH_serve.json
+# --------------------------------------------------------------------------- #
+
+
+SERVE_BENCH_ARCHS = ("qwen2-0.5b", "mamba2-1.3b")
+SERVE_BENCH_TRACE = dict(slots=4, n_requests=10, arrival_rate=0.6)
+
+
+def bench_serve(batch=4, prompt_len=32, gen_len=16, seed=0):
+    """The serving decode path (launch/serve.py, DESIGN.md §8) on reduced
+    configs: prefill-cache reuse vs prompt replay (TTFT + phase-separated
+    timings), steady-state decode tok/s with p50/p99 per-token latency, and
+    continuous vs static batching on the SAME Poisson arrival trace (makespan
+    and throughput in decode-step clock units — the scheduling comparison —
+    with compute wall seconds reported alongside, honestly: on CPU-reduced
+    configs continuous pays more prefill dispatches, so its wall tok/s can
+    trail static even when its trace throughput wins). All arms run with
+    warmup=True, so compile time is excluded. Writes BENCH_serve.json at the
+    repo root."""
+    from repro.launch.serve import (serve, serve_continuous, serve_replay,
+                                    serve_static)
+    kw = dict(reduced=True, batch=batch, prompt_len=prompt_len,
+              gen_len=gen_len, seed=seed, warmup=True, verbose=False)
+    tkw = dict(reduced=True, prompt_len=8, gen_len=gen_len, seed=seed,
+               warmup=True, verbose=False, **SERVE_BENCH_TRACE)
+    rows, out, entries = [], [], {}
+    for arch in SERVE_BENCH_ARCHS:
+        reuse = serve(arch, **kw)
+        replay = serve_replay(arch, **kw)
+        assert np.array_equal(reuse.tokens, replay.tokens)   # same greedy ids
+        cont = serve_continuous(arch, **tkw)
+        stat = serve_static(arch, **tkw)
+        rec = {}
+        for mode, r in (("reuse", reuse), ("replay", replay)):
+            rec[mode] = dict(r.timings)
+            rec[mode]["p50_token_s"] = float(np.percentile(r.per_token_s, 50))
+            rec[mode]["p99_token_s"] = float(np.percentile(r.per_token_s, 99))
+            rows.append({"arch": arch, "mode": mode, **rec[mode]})
+        for r in (cont, stat):
+            m = r.metrics
+            rec[m["mode"]] = {k: v for k, v in m.items()
+                              if k != "jit_cache_sizes"}
+            rec[m["mode"]]["jit_cache_step"] = m["jit_cache_sizes"]["step"]
+            rows.append({"arch": arch, "mode": m["mode"],
+                         "ttft_s": "", "tok_per_s": m["wall_tok_per_s"],
+                         "p50_token_s": m["p50_step_s"],
+                         "p99_token_s": m["p99_step_s"],
+                         "makespan_steps": m["makespan_steps"],
+                         "tok_per_step": m["tok_per_step"],
+                         "mean_queue_delay_steps":
+                             m["mean_queue_delay_steps"]})
+        entries[arch] = rec
+        a = arch.replace("-", "_").replace(".", "_")
+        out.append(("serve", f"ttft_speedup_reuse_{a}",
+                    round(replay.timings["ttft_s"]
+                          / max(reuse.timings["ttft_s"], 1e-9), 2)))
+        out.append(("serve", f"decode_tok_per_s_{a}",
+                    round(reuse.timings["tok_per_s"], 1)))
+        out.append(("serve", f"trace_throughput_x_continuous_{a}",
+                    round(cont.metrics["tok_per_step"]
+                          / max(stat.metrics["tok_per_step"], 1e-9), 2)))
+    path_json = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_serve.json")
+    with open(path_json, "w") as f:
+        json.dump({"bench": "serve_decode_path",
+                   "config": {"reduced": True, "batch": batch,
+                              "prompt_len": prompt_len, "gen_len": gen_len,
+                              "trace": {**SERVE_BENCH_TRACE,
+                                        "prompt_len": 8, "gen_len": gen_len,
+                                        "clock": "decode-step units; "
+                                                 "prefill=0 steps"},
+                              "warmup": True, "greedy": True,
+                              "backend": jax.default_backend()},
+                   "archs": entries}, f, indent=1)
+    return out, _emit(rows, "serve")
+
+
+# --------------------------------------------------------------------------- #
 # comm — communication volume per round
 # --------------------------------------------------------------------------- #
 
@@ -903,6 +986,7 @@ BENCHES = {
     "async": bench_async,
     "comm": bench_comm,
     "kernels": bench_kernels,
+    "serve": bench_serve,
 }
 
 

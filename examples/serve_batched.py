@@ -1,11 +1,14 @@
-"""Batched serving example: prefill + greedy decode on any assigned arch.
+"""Batched serving example: prefill-cache reuse + greedy decode on any arch.
 
   PYTHONPATH=src python examples/serve_batched.py --arch zamba2-2.7b
   PYTHONPATH=src python examples/serve_batched.py --arch qwen3-4b \
       --decode-window 16     # sliding-window decode (long_500k-style cache)
+  PYTHONPATH=src python examples/serve_batched.py --arch qwen2-0.5b \
+      --no-greedy --seed 3   # categorical sampling (Gumbel-max)
 
-Runs the REDUCED config on CPU; on TPU the same serve path lowers the full
-configs across the production mesh (launch/steps.build_serve_step).
+Runs the REDUCED config on CPU by default (--full for the paper config); on
+TPU the same serve path lowers the full configs across the production mesh
+(launch/steps.build_prefill_step / build_serve_step).
 """
 import argparse
 
@@ -13,13 +16,20 @@ from repro.launch.serve import serve
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="mamba2-1.3b")
+ap.add_argument("--full", action="store_true",
+                help="serve the full (paper-scale) config instead of reduced")
 ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--prompt-len", type=int, default=32)
 ap.add_argument("--gen-len", type=int, default=32)
 ap.add_argument("--decode-window", type=int, default=0)
+ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--no-greedy", action="store_true",
+                help="sample categorically instead of greedy argmax")
 args = ap.parse_args()
 
-tokens = serve(args.arch, reduced=True, batch=args.batch,
-               prompt_len=args.prompt_len, gen_len=args.gen_len,
-               decode_window=args.decode_window)
-print("generated token ids (first sequence):", tokens[0].tolist())
+res = serve(args.arch, reduced=not args.full, batch=args.batch,
+            prompt_len=args.prompt_len, gen_len=args.gen_len,
+            decode_window=args.decode_window, seed=args.seed,
+            greedy=not args.no_greedy)
+print("generated token ids (first sequence):", res.tokens[0].tolist())
+print("timings:", {k: round(v, 4) for k, v in res.timings.items()})

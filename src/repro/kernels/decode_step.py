@@ -1,0 +1,148 @@
+"""Fused decode-step kernels — Pallas TPU.
+
+Two kernels cover the decode hot loop's bandwidth-bound spots (DESIGN.md §8):
+
+* ``decode_attention`` — single-query flash decode: one grid cell per
+  (batch-slot, kv-head) reads the slot's whole C-deep KV ring plus a
+  precomputed additive mask bias (causal/window/ring-validity — computed by
+  the caller in O(C) jnp, which keeps the kernel agnostic to traced per-layer
+  windows) and produces the attended output for that head group.
+
+* ``decode_sample`` — the logits→token tail: unembed matmul against the
+  (V, d) embedding table fused with a running blockwise argmax over vocab
+  blocks, so the (B, V) logits are never materialised in HBM. ``noise`` is an
+  additive (B, V) fp32 operand: zeros = greedy argmax; Gumbel draws =
+  categorical sampling (the Gumbel-max trick — bitwise what
+  ``jax.random.categorical`` computes).
+
+Both kernel bodies source their math from ``kernels/ref.py`` (the
+``fused_step_flat`` contract pattern), and the shared math uses
+elementwise-mul + axis-sum contractions rather than ``jnp.dot`` so the
+per-cell kernel blocks and the batched oracle reduce in the same order —
+that is what makes fused == oracle *bitwise* on every backend (a dot-general
+would pick shape-dependent accumulation orders; see tests/test_serve.py).
+
+VMEM note: ``decode_attention`` holds one slot's full KV in VMEM — C·D·8
+bytes fp32 per (k, v); fine up to the LONG_DECODE_WINDOW ring (8192·64·4·2
+≈ 4 MiB) but not for an unwindowed 500k cache — long contexts must decode
+through ``decode_window``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as kref
+
+NEG_INF = -1e30
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+# --------------------------------------------------------------------------- #
+# single-query decode attention
+# --------------------------------------------------------------------------- #
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, b_ref, o_ref, *, softcap):
+    q = q_ref[0, 0]            # (rep, D)
+    k = k_ref[0, :, 0, :]      # (C, D)
+    v = v_ref[0, :, 0, :]      # (C, Dv)
+    bias = b_ref[0]            # (C,)
+    o_ref[0, 0] = kref.decode_attention_math(q, k, v, bias, softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def decode_attention(q, k, v, bias, *, softcap=0.0, interpret=False):
+    """q (B,H,D), k/v (B,C,Hk,D/Dv) cache layout, bias (B,C) fp32 additive
+    mask -> (B,H,Dv) fp32."""
+    B, H, D = q.shape
+    C, Hk = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    rep = H // Hk
+    qr = q.reshape(B, Hk, rep, D)
+    kern = functools.partial(_attn_kernel, softcap=softcap)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, C, 1, D), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, C, 1, Dv), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, C), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, Dv), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rep, Dv), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(qr, k, v, bias)
+    return out.reshape(B, H, Dv)
+
+
+# --------------------------------------------------------------------------- #
+# fused unembed + sampling tail
+# --------------------------------------------------------------------------- #
+
+
+def _sample_kernel(y_ref, t_ref, n_ref, best_ref, arg_ref, *, blk, v_real,
+                   scale):
+    j = pl.program_id(0)
+    logits = kref.decode_sample_math(y_ref[...], t_ref[...], n_ref[...],
+                                     scale)                       # (B, blk)
+    vidx = j * blk + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(vidx < v_real, logits, NEG_INF)
+    m = logits.max(axis=1)                                        # (B,)
+    a = (j * blk + jnp.argmax(logits, axis=1)).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[0] = m
+        arg_ref[0] = a
+
+    @pl.when(j > 0)
+    def _update():
+        prev = best_ref[0]
+        upd = m > prev            # strict: earlier block wins ties, like argmax
+        arg_ref[0] = jnp.where(upd, a, arg_ref[0])
+        best_ref[0] = jnp.where(upd, m, prev)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "v_real", "block",
+                                             "interpret"))
+def decode_sample(y, table, noise, *, scale, v_real, block=2048,
+                  interpret=False):
+    """y (B,d) final hidden, table (V,d), noise (B,V) fp32 -> token ids (B,).
+
+    token[b] = argmax_v<v_real (y[b]·table[v])*scale + noise[b,v]. The vocab
+    grid is sequential ("arbitrary"): a running (best, arg) pair lives in the
+    output blocks across vocab steps.
+    """
+    B, d = y.shape
+    V = table.shape[0]
+    block = min(block, V)
+    assert V % block == 0, (V, block)
+    kern = functools.partial(_sample_kernel, blk=block, v_real=v_real,
+                             scale=scale)
+    _, arg = pl.pallas_call(
+        kern,
+        grid=(V // block,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j: (0, 0)),
+            pl.BlockSpec((block, d), lambda j: (j, 0)),
+            pl.BlockSpec((B, block), lambda j: (0, j)),
+        ],
+        out_specs=[pl.BlockSpec((1, B), lambda j: (0, 0)),
+                   pl.BlockSpec((1, B), lambda j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, B), jnp.float32),
+                   jax.ShapeDtypeStruct((1, B), jnp.int32)],
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(y, table, noise)
+    return arg[0]

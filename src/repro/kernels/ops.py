@@ -11,6 +11,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_step as _ds
 from repro.kernels import flash_attention as _fa
 from repro.kernels import quantize_update as _qu
 from repro.kernels import scaled_update as _su
@@ -93,6 +94,29 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                                   softcap=softcap, bq=bq, bk=bk,
                                   interpret=_interpret())
     return ot.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, bias, *, softcap=0.0):
+    """Fused single-query decode attention against one KV ring.
+
+    q (B,H,D); k/v (B,C,Hk,D/Dv) in decode-cache layout; bias (B,C) additive
+    fp32 mask (causal + window + ring validity, precomputed by the caller).
+    Returns (B,H,Dv) fp32 — bitwise-equal to ``ref.decode_attention_ref``.
+    """
+    return _ds.decode_attention(q, k, v, bias, softcap=float(softcap),
+                                interpret=_interpret())
+
+
+def decode_sample(y, table, noise, *, scale, v_real, block=2048):
+    """Fused unembed + gumbel-argmax sampling tail.
+
+    y (B,d) final hidden; table (V,d); noise (B,V) fp32 (zeros = greedy).
+    Returns token ids (B,) int32 without materialising the (B,V) logits —
+    bitwise-equal to ``ref.decode_sample_ref``.
+    """
+    return _ds.decode_sample(y, table, noise, scale=float(scale),
+                             v_real=int(v_real), block=block,
+                             interpret=_interpret())
 
 
 def ssd(xh, dt, A, Bm, Cm, *, chunk):

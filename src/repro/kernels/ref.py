@@ -94,6 +94,72 @@ def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
     return out.astype(q.dtype)
 
 
+def decode_attention_math(q, k, v, bias, softcap):
+    """Single-query decode attention for one (batch-slot, kv-head) cell.
+
+    q (..., R, D) query heads sharing one kv head; k (..., C, D),
+    v (..., C, Dv); bias (..., C) additive fp32 mask (causal/window/ring
+    validity, from models.layers._mask_bias). The single source of truth for
+    ``decode_step.decode_attention``: contractions are elementwise-mul +
+    axis-sum (not dot_general) so the per-cell kernel blocks and the batched
+    oracle accumulate in the same order — fused == unfused *bitwise*.
+    """
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    kf = k.astype(jnp.float32)
+    s = (qf[..., :, None, :] * kf[..., None, :, :]).sum(-1)       # (..., R, C)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias[..., None, :].astype(jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    vf = v.astype(jnp.float32)
+    return (w[..., :, :, None] * vf[..., None, :, :]).sum(-2)     # (..., R, Dv)
+
+
+def decode_attention_ref(q, k, v, bias, *, softcap=0.0):
+    """q (B,H,D), k/v (B,C,Hk,D/Dv) cache layout, bias (B,C) -> (B,H,Dv)."""
+    B, H, D = q.shape
+    Hk = k.shape[2]
+    rep = H // Hk
+    qr = q.reshape(B, Hk, rep, D)
+    kr = k.transpose(0, 2, 1, 3)                                  # (B,Hk,C,D)
+    vr = v.transpose(0, 2, 1, 3)
+    out = decode_attention_math(qr, kr, vr, bias[:, None, :], softcap)
+    return out.reshape(B, H, -1)
+
+
+def decode_sample_math(y, table, noise, scale):
+    """One vocab-block logit tile: (y·table_v)*scale + noise.
+
+    y (B,d), table (blk,d), noise (B,blk) -> (B,blk) fp32. Mul+sum
+    contraction for the same bitwise reason as ``decode_attention_math``.
+    """
+    s = (y.astype(jnp.float32)[:, None, :]
+         * table.astype(jnp.float32)[None, :, :]).sum(-1)
+    return s * scale + noise.astype(jnp.float32)
+
+
+def decode_sample_ref(y, table, noise, *, scale, v_real, block=2048):
+    """Blockwise argmax over the vocab, walking blocks in kernel order (the
+    strict ``>`` running compare reproduces full-argmax first-index
+    tie-breaking). Returns token ids (B,) int32."""
+    V = table.shape[0]
+    block = min(block, V)
+    assert V % block == 0, (V, block)
+    vidx = jnp.arange(V)
+    best = jnp.full((y.shape[0],), -jnp.inf, jnp.float32)
+    arg = jnp.zeros((y.shape[0],), jnp.int32)
+    for j in range(V // block):
+        sl = slice(j * block, (j + 1) * block)
+        logits = decode_sample_math(y, table[sl], noise[:, sl], scale)
+        logits = jnp.where(vidx[None, sl] < v_real, logits, -1e30)
+        m = logits.max(axis=1)
+        a = (j * block + jnp.argmax(logits, axis=1)).astype(jnp.int32)
+        upd = m > best
+        arg = jnp.where(upd, a, arg)
+        best = jnp.where(upd, m, best)
+    return arg
+
+
 def ssd_ref(xh, dt, A, Bm, Cm):
     """Naive sequential SSD recurrence (see models/ssm.ssd_reference)."""
     from repro.models.ssm import ssd_reference

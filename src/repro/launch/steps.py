@@ -323,7 +323,14 @@ def _bf16_params(params_shape):
 
 def build_prefill_step(arch: str, shape: ShapeConfig, mesh, *,
                        call: Optional[ModelCallConfig] = None,
-                       reduced: bool = False):
+                       reduced: bool = False,
+                       cache_len: Optional[int] = None):
+    """Full-sequence prefill on the serve mesh.
+
+    With ``cache_len`` the step is ``model.prefill_cache``: the returned cache
+    is in decode layout, populated so a serve_step continues at
+    pos = seq_len with no prompt replay (DESIGN.md §8).
+    """
     cfg = get_config(arch, reduced=reduced)
     call = call or ModelCallConfig()
     plan = _serve_plan(arch, mesh)
@@ -339,25 +346,35 @@ def build_prefill_step(arch: str, shape: ShapeConfig, mesh, *,
     pspec = params_pspecs(cfg, params_shape, mesh, plan, client_dim=False)
     bspec = serve_batch_pspecs(batch_shape, mesh, plan)
 
-    out_shape = jax.eval_shape(model.prefill, params_shape, batch_shape)
+    if cache_len is not None:
+        fn = partial(model.prefill_cache, cache_len=cache_len)
+    else:
+        fn = model.prefill
+    out_shape = jax.eval_shape(fn, params_shape, batch_shape)
     logits_spec = P(tuple(plan.batch), None)
     cache_spec = cache_pspecs(cfg, out_shape[1], mesh, plan)
 
     ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                 is_leaf=lambda x: isinstance(x, P))
     return BuiltStep(
-        fn=model.prefill,
+        fn=fn,
         args=(params_shape, batch_shape),
         in_shardings=(ns(pspec), ns(bspec)),
         out_shardings=(ns(logits_spec), ns(cache_spec)),
-        meta={"cfg": cfg, "plan": plan},
+        meta={"cfg": cfg, "plan": plan, "cache_len": cache_len},
     )
 
 
 def build_serve_step(arch: str, shape: ShapeConfig, mesh, *,
                      call: Optional[ModelCallConfig] = None,
-                     reduced: bool = False):
-    """ONE-token decode against a seq_len-deep KV cache."""
+                     reduced: bool = False, pos_per_slot: bool = False):
+    """ONE-token decode against a seq_len-deep KV cache.
+
+    ``pos_per_slot=True`` makes pos a (B,) vector — every slot of the decode
+    ring at its own depth (continuous batching; DESIGN.md §8). The cache stays
+    slot-major: batch (slot) dim sharded over the data axes by cache_pspecs,
+    so one jitted step serves the whole ring across request churn.
+    """
     cfg = get_config(arch, reduced=reduced)
     call = _serve_call(arch, shape, call)
     plan = _serve_plan(arch, mesh)
@@ -371,7 +388,7 @@ def build_serve_step(arch: str, shape: ShapeConfig, mesh, *,
                                                jax.random.PRNGKey(0)))
     cache_shape = jax.eval_shape(partial(model.init_cache, B, shape.seq_len))
     token_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
-    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((B,) if pos_per_slot else (), jnp.int32)
 
     def serve_step(params, cache, token, pos):
         return model.decode(params, cache, token, pos)
@@ -380,16 +397,17 @@ def build_serve_step(arch: str, shape: ShapeConfig, mesh, *,
     cspec = cache_pspecs(cfg, cache_shape, mesh, plan)
     tok_spec = P(tuple(plan.batch)) if B % _ax(mesh, plan.batch) == 0 else P(None)
     logits_spec = P(tok_spec[0] if tok_spec != P(None) else None, None)
+    pos_spec = tok_spec if pos_per_slot else P()
 
     ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                 is_leaf=lambda x: isinstance(x, P))
     return BuiltStep(
         fn=serve_step,
         args=(params_shape, cache_shape, token_shape, pos_shape),
-        in_shardings=(ns(pspec), ns(cspec), ns(tok_spec), ns(P())),
+        in_shardings=(ns(pspec), ns(cspec), ns(tok_spec), ns(pos_spec)),
         out_shardings=(ns(logits_spec), ns(cspec)),
         donate=(1,),
-        meta={"cfg": cfg, "plan": plan,
+        meta={"cfg": cfg, "plan": plan, "pos_per_slot": pos_per_slot,
               "decode_window": call.decode_window},
     )
 

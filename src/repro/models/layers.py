@@ -136,12 +136,16 @@ def _mask_bias(q_pos, k_pos, window, k_valid=None):
     (static sliding window), or a traced int32 scalar (per-layer window inside a
     layer scan — gemma3's 5:1 local:global pattern; global layers pass a huge
     value).
+
+    ``q_pos``/``k_pos`` are (Sq,)/(Sk,) for a shared position grid, or carry
+    leading batch dims — (B,Sq)/(B,Sk) for per-slot decode positions in the
+    continuous-batching ring — giving a (B,Sq,Sk) bias.
     """
-    ok = k_pos[None, :] <= q_pos[:, None]
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
     if _window_on(window):
-        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
     if k_valid is not None:
-        ok &= k_valid[None, :]
+        ok &= k_valid[..., None, :]
     return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
 
 
@@ -154,7 +158,11 @@ def _window_on(window) -> bool:
 
 
 def _sdpa_dense(q, k, v, q_pos, k_pos, window, softcap, k_valid=None):
-    """q (B,Sq,H,D), k/v (B,Sk,Hk,D) -> (B,Sq,H,D).  fp32 softmax."""
+    """q (B,Sq,H,D), k/v (B,Sk,Hk,D) -> (B,Sq,H,D).  fp32 softmax.
+
+    Positions are (Sq,)/(Sk,) shared across the batch, or (B,Sq)/(B,Sk) for
+    per-slot decode positions (continuous batching).
+    """
     B, Sq, H, D = q.shape
     Hk = k.shape[2]
     rep = H // Hk
@@ -164,7 +172,9 @@ def _sdpa_dense(q, k, v, q_pos, k_pos, window, softcap, k_valid=None):
     qf = qf.reshape(B, Sq, Hk, rep, D)
     logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf)
     logits = _softcap(logits, softcap)
-    logits = logits + _mask_bias(q_pos, k_pos, window, k_valid)[None, None, None]
+    bias = _mask_bias(q_pos, k_pos, window, k_valid)
+    # (Sq,Sk) -> (1,1,Sq,Sk) broadcast; (B,Sq,Sk) -> (B,1,1,Sq,Sk)
+    logits = logits + bias[..., None, None, :, :]
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhrqk,bkhd->bqhrd", w, vf)
     return out.reshape(B, Sq, H, v.shape[-1])  # v head dim may differ (MLA)
@@ -219,6 +229,7 @@ class AttnCall:
     softcap: float = 0.0
     chunk: int = 0            # 0 = dense; else KV-chunked online softmax
     use_flash_kernel: bool = False  # route through the Pallas kernel (TPU)
+    use_decode_kernel: bool = False  # fused single-query decode (kernels/)
     force_window: int = 0
     exact_moe: bool = False   # capacity = N*K (no token drops); tests only
     moe_shard: object = None  # sharding-constraint hook for MoE buffers
@@ -264,7 +275,11 @@ def attention(p, cfg: ModelConfig, x, positions, call: AttnCall, dtype):
 
 def attention_decode(p, cfg: ModelConfig, x, pos, kcache, vcache, call: AttnCall,
                      dtype):
-    """Decode one token: x (B,1,d), pos scalar int32; cache (B,C,Hk,D).
+    """Decode one token: x (B,1,d); cache (B,C,Hk,D).
+
+    ``pos`` is a scalar int32 (one shared position — the classic batched-serve
+    path) or a (B,) int32 vector of per-slot positions (continuous batching:
+    every slot of the ring is at its own depth in its own sequence).
 
     The cache may be a ring buffer (C == window) — slot = pos % C; key positions
     are reconstructed so causal/window masking stays correct.
@@ -278,22 +293,45 @@ def attention_decode(p, cfg: ModelConfig, x, pos, kcache, vcache, call: AttnCall
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
-    posv = jnp.full((1,), pos, jnp.int32)
-    cos, sin = rope_cos_sin(posv, hd, cfg.rope_theta)
-    q = apply_rope(q, cos, sin).astype(dtype)
-    k = apply_rope(k, cos, sin).astype(dtype)
-    slot = jnp.mod(pos, C)
-    kcache = jax.lax.dynamic_update_slice(kcache, k.astype(kcache.dtype),
-                                          (0, slot, 0, 0))
-    vcache = jax.lax.dynamic_update_slice(vcache, v.astype(vcache.dtype),
-                                          (0, slot, 0, 0))
-    # reconstruct absolute positions of cache slots for a ring buffer
     idx = jnp.arange(C, dtype=jnp.int32)
-    wrap = (pos // C) * C
-    k_pos = jnp.where(idx <= slot, wrap + idx, wrap - C + idx)
+    if jnp.ndim(pos) == 0:
+        posv = jnp.full((1,), pos, jnp.int32)
+        cos, sin = rope_cos_sin(posv, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin).astype(dtype)
+        k = apply_rope(k, cos, sin).astype(dtype)
+        slot = jnp.mod(pos, C)
+        kcache = jax.lax.dynamic_update_slice(kcache, k.astype(kcache.dtype),
+                                              (0, slot, 0, 0))
+        vcache = jax.lax.dynamic_update_slice(vcache, v.astype(vcache.dtype),
+                                              (0, slot, 0, 0))
+        # reconstruct absolute positions of cache slots for a ring buffer
+        wrap = (pos // C) * C
+        k_pos = jnp.where(idx <= slot, wrap + idx, wrap - C + idx)
+        q_pos = posv
+    else:
+        posb = pos.astype(jnp.int32)                     # (B,)
+        cos, sin = rope_cos_sin(posb[:, None], hd, cfg.rope_theta)  # (B,1,·)
+        q = apply_rope(q, cos, sin).astype(dtype)
+        k = apply_rope(k, cos, sin).astype(dtype)
+        slot = jnp.mod(posb, C)                          # (B,)
+        barange = jnp.arange(B)
+        kcache = kcache.at[barange, slot].set(k[:, 0].astype(kcache.dtype))
+        vcache = vcache.at[barange, slot].set(v[:, 0].astype(vcache.dtype))
+        wrap = (posb // C) * C                           # (B,)
+        k_pos = jnp.where(idx[None, :] <= slot[:, None],
+                          wrap[:, None] + idx[None, :],
+                          wrap[:, None] - C + idx[None, :])  # (B,C)
+        q_pos = posb[:, None]                            # (B,1)
     k_valid = k_pos >= 0
-    out = _sdpa_dense(q, kcache, vcache, posv, k_pos, call.window, call.softcap,
-                      k_valid=k_valid)
+    if call.use_decode_kernel:
+        from repro.kernels import ops as kops
+        bias = _mask_bias(q_pos, k_pos, call.window, k_valid)  # (·,1?,C)
+        bias = jnp.broadcast_to(bias.reshape(-1, C), (B, C))
+        out = kops.decode_attention(q[:, 0], kcache, vcache, bias,
+                                    softcap=call.softcap)[:, None]
+    else:
+        out = _sdpa_dense(q, kcache, vcache, q_pos, k_pos, call.window,
+                          call.softcap, k_valid=k_valid)
     return _proj_out(p["wo"], out.astype(dtype), dtype), kcache, vcache
 
 

@@ -109,19 +109,38 @@ def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, kpe_cache, dtype,
 
     ckv_cache (B,C,r), kpe_cache (B,C,rope); slot = pos (no ring buffer —
     MLA archs are full-attention, long_500k is skipped for them).
+
+    ``pos`` is a scalar int32, or a (B,) int32 vector of per-slot positions
+    (continuous batching).
     """
     m, H = cfg.mla, cfg.n_heads
     B = x.shape[0]
     C = ckv_cache.shape[1]
-    posv = jnp.full((1,), pos, jnp.int32)
-    q_nope, q_pe, _ = _project_q(p, cfg, x, posv, dtype)      # (B,1,H,*)
-    c_kv, k_pe = _latent_kv(p, cfg, x, posv, dtype)
-    ckv_cache = jax.lax.dynamic_update_slice(
-        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
-    kpe_cache = jax.lax.dynamic_update_slice(
-        kpe_cache, k_pe.astype(kpe_cache.dtype), (0, pos, 0))
     idx = jnp.arange(C, dtype=jnp.int32)
-    valid = idx <= pos
+    if jnp.ndim(pos) == 0:
+        posv = jnp.full((1,), pos, jnp.int32)
+        q_nope, q_pe, _ = _project_q(p, cfg, x, posv, dtype)  # (B,1,H,*)
+        c_kv, k_pe = _latent_kv(p, cfg, x, posv, dtype)
+        ckv_cache = jax.lax.dynamic_update_slice(
+            ckv_cache, c_kv.astype(ckv_cache.dtype), (0, pos, 0))
+        kpe_cache = jax.lax.dynamic_update_slice(
+            kpe_cache, k_pe.astype(kpe_cache.dtype), (0, pos, 0))
+        valid = idx <= pos                               # (C,)
+        vmask = valid[None, None, None]
+        q_pos = posv
+    else:
+        posb = pos.astype(jnp.int32)                     # (B,)
+        posv = posb[:, None]                             # (B,1)
+        q_nope, q_pe, _ = _project_q(p, cfg, x, posv, dtype)
+        c_kv, k_pe = _latent_kv(p, cfg, x, posv, dtype)
+        barange = jnp.arange(B)
+        ckv_cache = ckv_cache.at[barange, posb].set(
+            c_kv[:, 0].astype(ckv_cache.dtype))
+        kpe_cache = kpe_cache.at[barange, posb].set(
+            k_pe[:, 0].astype(kpe_cache.dtype))
+        valid = idx[None, :] <= posb[:, None]            # (B,C)
+        vmask = valid[:, None, None, :]
+        q_pos = posv
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
 
     if absorbed:
@@ -132,7 +151,7 @@ def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, kpe_cache, dtype,
                              ckv_cache.astype(jnp.float32))
                   + jnp.einsum("bqhd,bkd->bhqk", q_pe.astype(jnp.float32),
                                kpe_cache.astype(jnp.float32))) * scale
-        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        logits = jnp.where(vmask, logits, -1e30)
         w = jax.nn.softmax(logits, axis=-1)
         o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv_cache.astype(jnp.float32))
         wv = p["wv_b"]["w"].astype(jnp.float32)      # (r, H, v)
@@ -144,8 +163,9 @@ def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, kpe_cache, dtype,
                                  (B, C, H, m.qk_rope_head_dim))
         q = jnp.concatenate([q_nope, q_pe], -1)
         k = jnp.concatenate([k_nope, kpe_b], -1)
-        k_pos = jnp.where(valid, idx, jnp.iinfo(jnp.int32).max)
-        out = _sdpa_dense(q, k, v, posv, k_pos, 0, 0.0, k_valid=valid)
+        k_pos = jnp.where(valid, jnp.broadcast_to(idx, valid.shape),
+                          jnp.iinfo(jnp.int32).max)
+        out = _sdpa_dense(q, k, v, q_pos, k_pos, 0, 0.0, k_valid=valid)
 
     y = jnp.einsum("bshv,hvd->bsd", out.astype(dtype),
                    p["wo"]["w"].astype(dtype))

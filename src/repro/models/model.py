@@ -39,6 +39,7 @@ class ModelCallConfig:
     use_flash_kernel: bool = False
     mla_absorbed: bool = True       # MLA decode in latent space
     decode_window: int = 0          # ring-buffer decode cache (long_500k)
+    use_decode_kernel: bool = False  # fused Pallas decode attention + sampling
     softcap: float = 0.0
     exact_moe: bool = False         # no MoE capacity drops (tests)
     # optional residual-stream sharding hook: fn((B,S,d)) -> constrained array.
@@ -58,6 +59,12 @@ class Model:
     prefill: Callable         # (params, batch) -> (logits_last, cache)
     decode: Callable          # (params, cache, token (B,), pos) -> (logits, cache)
     init_cache: Callable      # (batch, cache_len) -> cache pytree
+    # (params, batch, cache_len) -> (logits_last, decode cache at pos=S):
+    # prefill whose cache feeds decode directly — no prompt replay.
+    prefill_cache: Callable = None
+    # (params, cache, token, pos, noise (B,V)) -> (next token (B,), cache):
+    # one decode step fused with gumbel-argmax sampling (greedy = zero noise).
+    decode_sample: Callable = None
 
 
 def build(cfg: ModelConfig, call: Optional[ModelCallConfig] = None) -> Model:
@@ -126,20 +133,75 @@ def build(cfg: ModelConfig, call: Optional[ModelCallConfig] = None) -> Model:
             else cache_len
         return T.init_decode_cache(cfg, batch_size, clen, dtype=jnp.bfloat16)
 
+    def prefill_cache(params, batch, cache_len):
+        """Prefill returning (last-pos logits, decode-ready cache).
+
+        Unlike ``prefill`` (whose cache is the raw stacked per-layer output),
+        the cache here is in ``init_cache`` layout, populated so decode
+        continues at pos = prompt_len — no prompt replay.
+        """
+        x, _, _ = _residual_input(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        y, caches, _ = T.forward(params["blocks"], cfg, x, positions,
+                                 _attncall(S), dtype, want_cache=True,
+                                 remat=False)
+        cache = T.prefill_to_decode_cache(cfg, caches, S,
+                                          init_cache(B, cache_len))
+        y = rmsnorm(params["final_norm"], y[:, -1:, :], cfg.norm_eps)
+        logits = unembed(params["embed"], y, cfg, dtype)
+        return logits[:, 0, :], cache
+
+    def _decode_call():
+        return AttnCall(window=call.decode_window or 0, softcap=call.softcap,
+                        force_window=call.decode_window,
+                        use_decode_kernel=call.use_decode_kernel,
+                        exact_moe=call.exact_moe, moe_shard=call.moe_shard)
+
     def decode(params, cache, token, pos):
-        """token (B,) int32 ids; pos scalar int32. Returns (logits (B,V), cache)."""
+        """token (B,) int32 ids; pos scalar int32 or (B,) per-slot positions.
+        Returns (logits (B,V), cache)."""
         x = embed(params["embed"], token[:, None], dtype)
-        dcall = AttnCall(window=call.decode_window or 0, softcap=call.softcap,
-                         force_window=call.decode_window,
-                         exact_moe=call.exact_moe, moe_shard=call.moe_shard)
-        y, cache = T.decode(params["blocks"], cfg, x, pos, cache, dcall, dtype,
+        y, cache = T.decode(params["blocks"], cfg, x, pos, cache,
+                            _decode_call(), dtype,
                             mla_absorbed=call.mla_absorbed)
         y = rmsnorm(params["final_norm"], y, cfg.norm_eps)
         logits = unembed(params["embed"], y, cfg, dtype)
         return logits[:, 0, :], cache
 
+    def decode_sample(params, cache, token, pos, noise):
+        """One decode step fused with sampling: next token = argmax over the
+        real vocab of logits + ``noise`` ((B,V) fp32; zeros = greedy, gumbel
+        draws = categorical). With ``use_decode_kernel`` the unembed matmul
+        and the argmax run in one Pallas pass without materialising logits."""
+        x = embed(params["embed"], token[:, None], dtype)
+        y, cache = T.decode(params["blocks"], cfg, x, pos, cache,
+                            _decode_call(), dtype,
+                            mla_absorbed=call.mla_absorbed)
+        y = rmsnorm(params["final_norm"], y, cfg.norm_eps)[:, 0, :]
+        if call.use_decode_kernel:
+            from repro.kernels import ops as kops
+            if cfg.tie_embeddings:
+                table, scale = params["embed"]["table"], cfg.d_model ** -0.5
+            else:
+                # (V, d) layout for the kernel; a production server would
+                # pre-transpose once instead of per step
+                table, scale = params["embed"]["head"].T, 1.0
+            tok = kops.decode_sample(y, table, noise, scale=scale,
+                                     v_real=cfg.vocab_size)
+        else:
+            logits = unembed(params["embed"], y[:, None, :], cfg, dtype)[:, 0]
+            logits = logits.astype(jnp.float32) + noise.astype(jnp.float32)
+            V = logits.shape[-1]
+            if V > cfg.vocab_size:
+                logits = jnp.where(jnp.arange(V) >= cfg.vocab_size, -jnp.inf,
+                                   logits)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, cache
+
     return Model(cfg=cfg, call=call, init=init, loss=loss, prefill=prefill,
-                 decode=decode, init_cache=init_cache)
+                 decode=decode, init_cache=init_cache,
+                 prefill_cache=prefill_cache, decode_sample=decode_sample)
 
 
 # --------------------------------------------------------------------------- #

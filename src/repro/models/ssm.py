@@ -124,13 +124,32 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk, h0=None):
     return y, h_fin
 
 
-def mamba2_forward(p, cfg: ModelConfig, u, dtype, h0=None, return_state=False):
-    """u (B,S,d) -> (B,S,d). Full-sequence (train / prefill)."""
+def _conv_tail(x, K):
+    """Last K-1 causal-conv inputs (left zero-padded when S < K-1): the conv
+    state a decode step starting at pos = S expects."""
+    S = x.shape[1]
+    if S >= K - 1:
+        return x[:, S - (K - 1):, :]
+    return jnp.pad(x, ((0, 0), (K - 1 - S, 0), (0, 0)))
+
+
+def mamba2_forward(p, cfg: ModelConfig, u, dtype, h0=None, return_state=False,
+                   return_cache=False):
+    """u (B,S,d) -> (B,S,d). Full-sequence (train / prefill).
+
+    ``return_cache=True`` additionally returns a decode cache (same pytree as
+    ``mamba2_init_cache``) positioned after the last token: the final SSD
+    state plus the depthwise-conv input tails — what serving needs to continue
+    decoding at pos = S without replaying the prompt.
+    """
     s, d_in, nh = _dims(cfg)
     Bsz, S, _ = u.shape
-    x = _causal_conv(linear(p["wx"], u, dtype), p["conv_x"].astype(dtype))
-    Bm = _causal_conv(linear(p["wB"], u, dtype), p["conv_B"].astype(dtype))
-    Cm = _causal_conv(linear(p["wC"], u, dtype), p["conv_C"].astype(dtype))
+    x_pre = linear(p["wx"], u, dtype)
+    B_pre = linear(p["wB"], u, dtype)
+    C_pre = linear(p["wC"], u, dtype)
+    x = _causal_conv(x_pre, p["conv_x"].astype(dtype))
+    Bm = _causal_conv(B_pre, p["conv_B"].astype(dtype))
+    Cm = _causal_conv(C_pre, p["conv_C"].astype(dtype))
     x, Bm, Cm = jax.nn.silu(x), jax.nn.silu(Bm), jax.nn.silu(Cm)
     z = linear(p["wz"], u, dtype)
     dt = jax.nn.softplus(linear(p["wdt"], u, jnp.float32)
@@ -148,6 +167,11 @@ def mamba2_forward(p, cfg: ModelConfig, u, dtype, h0=None, return_state=False):
     y = y.reshape(Bsz, S, d_in).astype(dtype)
     y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = linear(p["wo"], y, dtype)
+    if return_cache:
+        K = s.d_conv
+        cache = {"h": h_fin, "conv_x": _conv_tail(x_pre, K),
+                 "conv_B": _conv_tail(B_pre, K), "conv_C": _conv_tail(C_pre, K)}
+        return out, cache
     if return_state:
         return out, h_fin
     return out
@@ -156,11 +180,15 @@ def mamba2_forward(p, cfg: ModelConfig, u, dtype, h0=None, return_state=False):
 def mamba2_init_cache(cfg: ModelConfig, batch, dtype=jnp.float32):
     s, d_in, nh = _dims(cfg)
     gn = s.ngroups * s.d_state
+    # conv tails stay fp32 like h: _conv_step promotes the rolled window to
+    # fp32 anyway, and the cache dtype must be a fixed point of the decode
+    # step (the continuous-batching slot insert requires leaf dtypes to
+    # round-trip). K-1 rows per layer — negligible memory.
     return {
         "h": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
-        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
-        "conv_B": jnp.zeros((batch, s.d_conv - 1, gn), dtype),
-        "conv_C": jnp.zeros((batch, s.d_conv - 1, gn), dtype),
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), jnp.float32),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, gn), jnp.float32),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, gn), jnp.float32),
     }
 
 

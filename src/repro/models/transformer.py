@@ -13,6 +13,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models import layers as Lyr
@@ -119,8 +120,12 @@ def _block_fwd(bp, cfg, x, positions, window, call: AttnCall, dtype,
     """One uniform block. Returns (x, cache_leaf, aux)."""
     aux = jnp.float32(0.0)
     if cfg.family == "ssm" or cfg.family == "hybrid":
-        h = SSM.mamba2_forward(bp["mamba"], cfg,
-                               rmsnorm(bp["norm1"], x, cfg.norm_eps), dtype)
+        h_in = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        if want_cache:
+            h, mc = SSM.mamba2_forward(bp["mamba"], cfg, h_in, dtype,
+                                       return_cache=True)
+            return x + h, mc, aux
+        h = SSM.mamba2_forward(bp["mamba"], cfg, h_in, dtype)
         return x + h, None, aux
     h_in = rmsnorm(bp["norm1"], x, cfg.norm_eps)
     if cfg.mla:
@@ -189,7 +194,8 @@ def forward(params, cfg: ModelConfig, x, positions, call: AttnCall, dtype,
 
             x, skv = jax.lax.cond((idx % every) == (every - 1), with_attn,
                                   no_attn, x)
-            kv = skv if want_cache else None
+            # hybrid caches both the mamba states and the shared-block KV
+            kv = {"mamba": kv, "skv": skv} if want_cache else None
         ys = kv if want_cache else None
         return (x, aux_t + aux), ys
 
@@ -240,9 +246,80 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
     return c
 
 
+def _ring_place(src, C, S, axis):
+    """Place a length-S sequence axis into a C-slot ring at slot = pos % C.
+
+    Keeps the last min(S, C) positions (the only ones a windowed decode can
+    ever attend to) so decode at pos = S reconstructs k_pos exactly like a
+    cache that was filled token-by-token. S and C are static Python ints.
+    """
+    if S <= C:
+        pad = [(0, 0)] * src.ndim
+        pad[axis] = (0, C - S)
+        return jnp.pad(src, pad)
+    # slot c holds the unique position p in [S-C, S) with p % C == c
+    c = np.arange(C)
+    p = (S - C) + ((c - (S - C)) % C)
+    return jnp.take(src, p, axis=axis)
+
+
+def prefill_to_decode_cache(cfg: ModelConfig, caches, prompt_len: int, cache):
+    """Convert ``forward(want_cache=True)`` caches into the decode layout.
+
+    ``cache`` is a fresh ``init_decode_cache`` pytree whose leaves fix the
+    target shapes/dtypes (including the ring size C when decode_window is
+    on); the populated copy is returned, ready for decode at pos = prompt_len.
+    """
+    S = prompt_len
+    new = dict(cache)
+
+    if cfg.family in ("ssm", "hybrid"):
+        st = caches["stack"]
+        mc = st["mamba"] if cfg.hybrid_attn_every else st
+        new["mamba"] = jax.tree.map(lambda t, s: s.astype(t.dtype),
+                                    cache["mamba"], mc)
+        if cfg.hybrid_attn_every:
+            every = cfg.hybrid_attn_every
+            Ls = st["skv"][0].shape[0]
+            sel = np.arange(every - 1, Ls, every)    # layers that run shared attn
+            C = cache["shared_k"].shape[2]
+            new["shared_k"] = _ring_place(st["skv"][0][sel], C, S, axis=2) \
+                .astype(cache["shared_k"].dtype)
+            new["shared_v"] = _ring_place(st["skv"][1][sel], C, S, axis=2) \
+                .astype(cache["shared_v"].dtype)
+        return new
+
+    if cfg.mla:
+        C = cache["ckv"].shape[2]
+        assert S <= C, "MLA decode cache is not a ring buffer"
+        ck, kp = caches["stack"]                     # (Ls,B,S,r) / (Ls,B,S,rope)
+        new["ckv"] = _ring_place(ck, C, S, axis=2).astype(cache["ckv"].dtype)
+        new["kpe"] = _ring_place(kp, C, S, axis=2).astype(cache["kpe"].dtype)
+        if "p_ckv" in cache:
+            n_prefix = cache["p_ckv"].shape[0]
+            pc = jnp.stack([caches[f"prefix{i}"][0] for i in range(n_prefix)])
+            pk = jnp.stack([caches[f"prefix{i}"][1] for i in range(n_prefix)])
+            new["p_ckv"] = _ring_place(pc, C, S, axis=2).astype(cache["p_ckv"].dtype)
+            new["p_kpe"] = _ring_place(pk, C, S, axis=2).astype(cache["p_kpe"].dtype)
+        return new
+
+    C = cache["k"].shape[2]
+    k, v = caches["stack"]                           # (Ls,B,S,hk,hd)
+    new["k"] = _ring_place(k, C, S, axis=2).astype(cache["k"].dtype)
+    new["v"] = _ring_place(v, C, S, axis=2).astype(cache["v"].dtype)
+    if "pk" in cache:
+        n_prefix = cache["pk"].shape[0]
+        pk = jnp.stack([caches[f"prefix{i}"][0] for i in range(n_prefix)])
+        pv = jnp.stack([caches[f"prefix{i}"][1] for i in range(n_prefix)])
+        new["pk"] = _ring_place(pk, C, S, axis=2).astype(cache["pk"].dtype)
+        new["pv"] = _ring_place(pv, C, S, axis=2).astype(cache["pv"].dtype)
+    return new
+
+
 def decode(params, cfg: ModelConfig, x, pos, cache, call: AttnCall, dtype,
            mla_absorbed=True):
-    """x (B,1,d), pos scalar -> (y (B,1,d), new cache)."""
+    """x (B,1,d), pos scalar int32 or (B,) per-slot vector
+    -> (y (B,1,d), new cache)."""
     L = cfg.n_layers
     n_prefix = cfg.moe.moe_layer_start if (cfg.moe and cfg.moe.moe_layer_start) else 0
     Ls = L - n_prefix

@@ -1,0 +1,300 @@
+"""Serving-path pins (DESIGN.md §8): prefill-cache reuse, the fused decode
+kernels, per-slot vector positions, and continuous batching.
+
+What is pinned bitwise and what is pinned by tolerance is deliberate:
+
+* kernel vs oracle, vector-pos vs scalar-pos, and windowed vs full decode are
+  BITWISE — same math, same accumulation order by construction.
+* prefill-cache reuse vs prompt replay is pinned on greedy token ids plus
+  softmax probabilities: bitwise equality is unattainable here because XLA
+  picks different gemm accumulation orders for the (B,S,d) prefill matmuls
+  than for the (B,1,d) decode matmuls, so the two caches differ in the last
+  bf16 ulp. The tolerance budget matches tests/test_models._AGREE_TOL.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.models import ModelCallConfig, build, sample_batch
+
+# one arch per served model family; MoE runs exact (capacity buffers are
+# batch-shared, so dropped-token interference would couple decode slots)
+FAMILY_ARCHS = [
+    ("qwen2-0.5b", {}),                          # dense transformer
+    ("deepseek-67b", {}),                        # MLA
+    ("mamba2-1.3b", {}),                         # SSM
+    ("zamba2-2.7b", {}),                         # hybrid (shared attn)
+    ("qwen2-moe-a2.7b", {"exact_moe": True}),    # MoE
+]
+FAMILY_IDS = [a for a, _ in FAMILY_ARCHS]
+
+# max |Δp| on softmax probs, per arch (matches test_models._AGREE_TOL)
+_REUSE_TOL = {"qwen2-0.5b": 2e-3, "deepseek-67b": 2e-3, "mamba2-1.3b": 5e-3,
+              "zamba2-2.7b": 2e-2, "qwen2-moe-a2.7b": 8e-2, "qwen3-4b": 2e-3}
+
+
+def _model(arch, **kw):
+    cfg = get_config(arch, reduced=True)
+    call = ModelCallConfig(dtype=jnp.float32, **kw)
+    return cfg, build(cfg, call)
+
+
+def _replay_cache(model, params, toks, cache_len):
+    """The old serve path: feed the prompt token-by-token through decode."""
+    B, S = toks.shape
+    cache = model.init_cache(B, cache_len)
+    decode = jax.jit(model.decode)
+    logits = None
+    for t in range(S):
+        logits, cache = decode(params, cache, toks[:, t], jnp.int32(t))
+    return logits, cache
+
+
+def _probs(logits, vocab):
+    return np.asarray(jax.nn.softmax(logits[:, :vocab].astype(jnp.float32),
+                                     axis=-1))
+
+
+# --------------------------------------------------------------------------- #
+# prefill-cache reuse vs prompt replay
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch,kw", FAMILY_ARCHS, ids=FAMILY_IDS)
+def test_prefill_cache_reuse_matches_replay(arch, kw):
+    """model.prefill_cache's decode-layout cache continues at pos=S exactly
+    like a cache built by replaying the prompt: same greedy continuation, and
+    per-step softmax probs within the family tolerance."""
+    cfg, model = _model(arch, **kw)
+    B, S, G = 2, 8, 5
+    params = model.init(jax.random.PRNGKey(0))
+    batch = sample_batch(cfg, jax.random.PRNGKey(1), B, S)
+    clen = S + G
+    lg_r, cache_r = jax.jit(model.prefill_cache, static_argnums=2)(
+        params, batch, clen)
+    lg_p, cache_p = _replay_cache(model, params, batch["tokens"], clen)
+    decode = jax.jit(model.decode)
+    tol = _REUSE_TOL[arch]
+    for g in range(G):
+        d = np.abs(_probs(lg_r, cfg.vocab_size)
+                   - _probs(lg_p, cfg.vocab_size)).max()
+        assert d < tol, (arch, g, d)
+        tok_r = jnp.argmax(lg_r, -1).astype(jnp.int32)
+        tok_p = jnp.argmax(lg_p, -1).astype(jnp.int32)
+        assert np.array_equal(np.asarray(tok_r), np.asarray(tok_p)), (arch, g)
+        if g == G - 1:
+            break
+        lg_r, cache_r = decode(params, cache_r, tok_r, jnp.int32(S + g))
+        lg_p, cache_p = decode(params, cache_p, tok_p, jnp.int32(S + g))
+
+
+def test_prefill_cache_ring_placement_matches_replay():
+    """Prompt longer than the decode window: prefill_to_decode_cache must
+    place the surviving tail into ring slots exactly where a token-by-token
+    fill would have left them (slot = pos % C), or decode's k_pos
+    reconstruction dereferences the wrong cells."""
+    arch, W, S, G = "qwen3-4b", 8, 16, 4
+    cfg, model = _model(arch, decode_window=W)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = sample_batch(cfg, jax.random.PRNGKey(1), 2, S)
+    lg_r, cache_r = jax.jit(model.prefill_cache, static_argnums=2)(
+        params, batch, S + G)
+    lg_p, cache_p = _replay_cache(model, params, batch["tokens"], S + G)
+    decode = jax.jit(model.decode)
+    tol = _REUSE_TOL[arch]
+    for g in range(G):
+        d = np.abs(_probs(lg_r, cfg.vocab_size)
+                   - _probs(lg_p, cfg.vocab_size)).max()
+        assert d < tol, (g, d)
+        tok_r = jnp.argmax(lg_r, -1).astype(jnp.int32)
+        tok_p = jnp.argmax(lg_p, -1).astype(jnp.int32)
+        assert np.array_equal(np.asarray(tok_r), np.asarray(tok_p)), g
+        if g == G - 1:
+            break
+        lg_r, cache_r = decode(params, cache_r, tok_r, jnp.int32(S + g))
+        lg_p, cache_p = decode(params, cache_p, tok_p, jnp.int32(S + g))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-4b", "gemma3-4b",
+                                  "zamba2-2.7b"])
+def test_windowed_decode_bitwise_equals_full_for_short_seq(arch):
+    """decode_window=W with every position < W is a no-op: the serve driver
+    must produce BITWISE the tokens of the unwindowed path (same ring size,
+    same mask — a windowing bug would show as a changed token stream)."""
+    from repro.launch.serve import serve
+    W, S, G = 24, 6, 5
+    kw = dict(reduced=True, batch=2, prompt_len=S, gen_len=G,
+              cache_len=S + G, seed=0, verbose=False)
+    full = serve(arch, decode_window=0, **kw)
+    win = serve(arch, decode_window=W, **kw)
+    assert np.array_equal(full.tokens, win.tokens)
+
+
+# --------------------------------------------------------------------------- #
+# fused Pallas decode kernels vs their jnp oracles (bitwise)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,H,Hk,C,D,Dv,cap", [
+    (2, 8, 2, 48, 64, 64, 0.0),       # GQA rep=4
+    (3, 4, 4, 8, 32, 16, 30.0),       # MHA, Dv != D, softcapped
+    (1, 16, 4, 96, 128, 128, 0.0),    # deep ring
+])
+def test_decode_attention_kernel_bitwise(B, H, Hk, C, D, Dv, cap):
+    ks = jax.random.split(jax.random.key(C + D), 4)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, C, Hk, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, C, Hk, Dv), jnp.bfloat16)
+    pos = jax.random.randint(ks[3], (B,), 0, C, jnp.int32)
+    bias = jnp.where(jnp.arange(C)[None] <= pos[:, None], 0.0, -1e30)
+    out_k = ops.decode_attention(q, k, v, bias, softcap=cap)
+    out_r = jax.jit(lambda *a: kref.decode_attention_ref(*a, softcap=cap))(
+        q, k, v, bias)
+    assert out_k.dtype == jnp.float32
+    assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("B,d,V,v_real,greedy", [
+    (2, 64, 4096, 4000, True),        # pad-vocab masking
+    (4, 128, 8192, 8192, False),      # gumbel sampling
+    (1, 32, 2048, 100, False),        # tiny real vocab
+])
+def test_decode_sample_kernel_bitwise(B, d, V, v_real, greedy):
+    ks = jax.random.split(jax.random.key(V + B), 3)
+    y = jax.random.normal(ks[0], (B, d), jnp.float32)
+    table = jax.random.normal(ks[1], (V, d), jnp.float32) * 0.05
+    noise = jnp.zeros((B, V), jnp.float32) if greedy \
+        else jax.random.gumbel(ks[2], (B, V), jnp.float32)
+    tok_k = ops.decode_sample(y, table, noise, scale=d ** -0.5, v_real=v_real)
+    tok_r = jax.jit(lambda *a: kref.decode_sample_ref(
+        *a, scale=d ** -0.5, v_real=v_real))(y, table, noise)
+    assert np.array_equal(np.asarray(tok_k), np.asarray(tok_r))
+    assert int(np.asarray(tok_k).max()) < v_real
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma3-4b"])
+def test_fused_decode_kernel_token_parity(arch):
+    """End-to-end: use_decode_kernel routes decode attention AND the sampling
+    tail through the Pallas kernels; the greedy token stream must match the
+    unfused model exactly (gemma3 also exercises the softcap path)."""
+    cfg, m0 = _model(arch)
+    _, m1 = _model(arch, use_decode_kernel=True)
+    params = m0.init(jax.random.key(0))
+    B, S, G = 2, 12, 6
+    batch = sample_batch(cfg, jax.random.PRNGKey(1), B, S)
+    lg, c0 = jax.jit(m0.prefill_cache, static_argnums=2)(params, batch, S + G)
+    c1 = jax.tree.map(lambda x: x, c0)
+    noise = jnp.zeros((B, lg.shape[-1]), jnp.float32)
+    t0 = t1 = jnp.argmax(lg, -1).astype(jnp.int32)
+    d0, d1 = jax.jit(m0.decode_sample), jax.jit(m1.decode_sample)
+    for g in range(G):
+        t0, c0 = d0(params, c0, t0, jnp.int32(S + g), noise)
+        t1, c1 = d1(params, c1, t1, jnp.int32(S + g), noise)
+        assert np.array_equal(np.asarray(t0), np.asarray(t1)), (arch, g)
+
+
+# --------------------------------------------------------------------------- #
+# per-slot vector positions (continuous batching's decode contract)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("arch,kw", FAMILY_ARCHS, ids=FAMILY_IDS)
+def test_vector_pos_decode_bitwise_matches_scalar(arch, kw):
+    """decode with pos = full((B,), p) must be BITWISE the scalar-pos decode:
+    the vector branch is the same math with per-row indices, so any
+    accumulation-order drift here would silently skew every served slot."""
+    cfg, model = _model(arch, **kw)
+    B, S, G = 2, 8, 4
+    params = model.init(jax.random.PRNGKey(0))
+    batch = sample_batch(cfg, jax.random.PRNGKey(1), B, S)
+    _, cache_s = jax.jit(model.prefill_cache, static_argnums=2)(
+        params, batch, S + G)
+    cache_v = jax.tree.map(lambda x: x, cache_s)
+    decode = jax.jit(model.decode)
+    tok_s = tok_v = jnp.zeros((B,), jnp.int32)
+    for g in range(G):
+        lg_s, cache_s = decode(params, cache_s, tok_s, jnp.int32(S + g))
+        lg_v, cache_v = decode(params, cache_v, tok_v,
+                               jnp.full((B,), S + g, jnp.int32))
+        assert np.array_equal(np.asarray(lg_s), np.asarray(lg_v)), (arch, g)
+        tok_s = jnp.argmax(lg_s, -1).astype(jnp.int32)
+        tok_v = jnp.argmax(lg_v, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "qwen3-4b", "gemma3-4b",
+                                  "deepseek-67b", "mamba2-1.3b",
+                                  "zamba2-2.7b", "qwen2-moe-a2.7b",
+                                  "deepseek-v2-236b"])
+def test_decode_cache_is_dtype_and_shape_fixed_point(arch):
+    """One decode step must return a cache with the leaf dtypes/shapes of
+    init_cache: the continuous-batching slot insert (dynamic_update_slice of a
+    fresh prefill cache into the live ring) requires the cache pytree to be a
+    fixed point of the step, and any silent upcast would also defeat the
+    donated serve-step buffer reuse."""
+    cfg, model = _model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 12)
+    _, c2 = jax.jit(model.decode)(params, cache, jnp.zeros((2,), jnp.int32),
+                                  jnp.zeros((2,), jnp.int32))
+    assert jax.tree.map(lambda x: (x.shape, x.dtype), cache) \
+        == jax.tree.map(lambda x: (x.shape, x.dtype), c2)
+
+
+# --------------------------------------------------------------------------- #
+# continuous batching: slot ring vs solo / static, zero recompilation
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,kw",
+                         [("qwen2-0.5b", {}),
+                          ("qwen2-moe-a2.7b", {"exact_moe": True})],
+                         ids=["qwen2-0.5b", "qwen2-moe-a2.7b"])
+def test_continuous_batching_matches_solo_and_static(arch, kw):
+    """Every request served through the slot ring gets EXACTLY the greedy
+    tokens it would get served alone (admission/eviction and neighbor churn
+    must not leak across slots), the static-batching baseline on the same
+    trace agrees, and nothing recompiled across request churn."""
+    from repro.launch.serve import (poisson_trace, request_prompt, serve,
+                                    serve_continuous, serve_static)
+    S, G, n, rate, seed = 8, 6, 6, 0.7, 0
+    tkw = dict(reduced=True, slots=3, n_requests=n, prompt_len=S, gen_len=G,
+               arrival_rate=rate, seed=seed, verbose=False, **kw)
+    rc = serve_continuous(arch, **tkw)
+    rs = serve_static(arch, **tkw)
+    assert all(v == 1 for v in rc.metrics["jit_cache_sizes"].values()), \
+        rc.metrics["jit_cache_sizes"]        # zero recompilation
+    cfg = get_config(arch, reduced=True)
+    _, gens = poisson_trace(n, rate, seed, G)
+    for r in range(n):
+        assert np.array_equal(rc.tokens[r], rs.tokens[r]), r
+        solo = serve(arch, reduced=True, batch=1, prompt_len=S,
+                     gen_len=int(gens[r]), cache_len=S + G,
+                     prompt=request_prompt(cfg, seed, r, S), seed=seed,
+                     verbose=False, **kw)
+        assert np.array_equal(solo.tokens[0], rc.tokens[r]), r
+    # admission/eviction actually happened: some request was queued or the
+    # ring turned over (n > slots guarantees at least one eviction+reuse)
+    assert rc.metrics["makespan_steps"] >= max(int(g) for g in gens)
+
+
+@pytest.mark.slow
+def test_serve_replay_driver_differential():
+    """The driver-level differential: serve (cache reuse) and serve_replay
+    emit identical greedy tokens, and the phase attribution is honest —
+    reuse pays prefill with zero cache setup, replay pays cache setup with
+    zero prefill."""
+    from repro.launch.serve import serve, serve_replay
+    kw = dict(reduced=True, batch=2, prompt_len=8, gen_len=5, seed=0,
+              verbose=False)
+    reuse = serve("qwen2-0.5b", **kw)
+    replay = serve_replay("qwen2-0.5b", **kw)
+    assert np.array_equal(reuse.tokens, replay.tokens)
+    assert reuse.timings["cache_setup_s"] == 0.0
+    assert reuse.timings["prefill_s"] > 0.0
+    assert replay.timings["prefill_s"] == 0.0
+    assert replay.timings["cache_setup_s"] > 0.0

@@ -202,9 +202,12 @@ def test_train_driver_engine_methods():
 
 def test_serve_driver():
     from repro.launch.serve import serve
-    out = serve("qwen2-0.5b", reduced=True, batch=2, prompt_len=8, gen_len=4,
+    res = serve("qwen2-0.5b", reduced=True, batch=2, prompt_len=8, gen_len=4,
                 verbose=False)
-    assert out.shape == (2, 4)
+    assert res.tokens.shape == (2, 4)
+    assert res.timings["cache_setup_s"] == 0.0     # reuse path: no replay
+    assert res.timings["prefill_s"] > 0.0
+    assert res.per_token_s.shape == (3,)           # gen_len - 1 decode steps
 
 
 def test_dryrun_fused_sharded_artifact_schema():
