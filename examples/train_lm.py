@@ -1,13 +1,20 @@
-"""End-to-end driver: SAVIC-train a ~100M-parameter qwen2-family LM.
+"""End-to-end driver: train a ~100M-parameter qwen2-family LM.
 
   PYTHONPATH=src python examples/train_lm.py                  # full ~100M
   PYTHONPATH=src python examples/train_lm.py --tiny           # CPU-quick
+  PYTHONPATH=src python examples/train_lm.py --tiny --method local-adam
+
+Thin wrapper over the production driver (repro.launch.train): registers a
+custom ~100M config into the registry, picks size-appropriate defaults, and
+forwards everything else — ``--method`` selects any of the six engine
+methods, and unknown flags (``--mesh``, ``--compression``, ...) pass through
+to the driver verbatim.
 
 The full config is a 12-layer, d=768 qwen2-style decoder (~100M params
-excluding embeddings) trained on the synthetic Markov token stream for a few
-hundred rounds with Adam-scaled SAVIC; --tiny shrinks it for smoke use.
-Demonstrates: config registry extension, data pipeline, checkpointing,
-restart, and metrics logging through the public API.
+excluding embeddings) trained on the synthetic Markov token stream;
+--tiny shrinks it for smoke use. Restart is deterministic: rerunning with
+the same --ckpt resumes at the saved round and replays the same per-round
+keys and round-addressable data, bitwise (DESIGN.md §9).
 """
 import argparse
 
@@ -18,8 +25,11 @@ import sys, types
 ap = argparse.ArgumentParser()
 ap.add_argument("--tiny", action="store_true")
 ap.add_argument("--rounds", type=int, default=0)
+ap.add_argument("--method", default="savic",
+                help="engine method (savic | fedavg | fedadagrad | fedadam "
+                     "| fedyogi | local-adam)")
 ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
-args = ap.parse_args()
+args, passthrough = ap.parse_known_args()
 
 # register a custom ~100M arch into the config registry
 CONFIG = ModelConfig(
@@ -40,6 +50,7 @@ from repro.launch import train as train_mod   # noqa: E402
 
 rounds = args.rounds or (5 if args.tiny else 300)
 train_args = ["--arch", "lm-100m", "--rounds", str(rounds),
+              "--method", args.method,
               "--h-local", "4", "--clients", "4",
               "--batch", "4" if args.tiny else "8",
               "--seq", "64" if args.tiny else "256",
@@ -48,5 +59,5 @@ train_args = ["--arch", "lm-100m", "--rounds", str(rounds),
               "--log", "results/train_lm_log.json"]
 if args.tiny:
     train_args.append("--reduced")
-log = train_mod.main(train_args)
+log = train_mod.main(train_args + passthrough)
 print(f"final loss {log[-1]['loss']:.4f} (round {log[-1]['round']})")

@@ -23,7 +23,14 @@ _MAGIC = "repro-ckpt-v1"
 def save(ckpt_dir: str, step: int, state, keep: int = 3) -> str:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = path + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    # a save that crashed mid-write leaves its step_*.tmp dir behind (only a
+    # COMPLETE tmp is ever renamed into place); reclaim all orphans before
+    # starting this write
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    os.makedirs(tmp)
     manifest = {"magic": _MAGIC, "step": step, "leaves": []}
     with open(os.path.join(tmp, "data.bin"), "wb") as fb:
         off = 0

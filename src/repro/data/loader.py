@@ -49,16 +49,18 @@ class QuadraticLoader:
 
 
 class LMRoundLoader:
+    """Round-addressable LM round batches: ``round_batch(r, ...)`` is a pure
+    function of (stream seed, r, M, H, b, S) — all M·H·b sequences come from
+    ONE vectorized ``TokenStream.batch_at`` draw (the former Python M×H loop
+    was a per-round bottleneck at LM shapes), and a restored run at round r
+    draws round-r data (DESIGN.md §9)."""
+
     def __init__(self, stream, n_clients: int, batch_size: int):
         self.stream = stream
         self.M = n_clients
         self.b = batch_size
 
-    def round_batch(self, H: int, seq_len: int):
-        toks = np.empty((self.M, H, self.b, seq_len), np.int32)
-        labs = np.empty_like(toks)
-        for m in range(self.M):
-            for h in range(H):
-                t, l = self.stream.batch(self.b, seq_len)
-                toks[m, h], labs[m, h] = t, l
-        return {"tokens": toks, "labels": labs}
+    def round_batch(self, r: int, H: int, seq_len: int):
+        toks, labs = self.stream.batch_at(r, self.M * H * self.b, seq_len)
+        shape = (self.M, H, self.b, seq_len)
+        return {"tokens": toks.reshape(shape), "labels": labs.reshape(shape)}

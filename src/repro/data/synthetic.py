@@ -85,25 +85,47 @@ class QuadraticProblem:
 
 class TokenStream:
     """Deterministic synthetic LM data: tokens from a mixture of order-2
-    Markov chains (so a real model can reduce loss well below uniform)."""
+    Markov chains (so a real model can reduce loss well below uniform).
+
+    Two access modes share one vectorized walk (a single Python loop over the
+    sequence dim; all batch dims advance in one fancy-indexed step):
+
+    * ``batch``    — stateful stream, kept for single-shot consumers;
+    * ``batch_at`` — stateless and round-addressable: batch ``index`` is a
+      pure function of (stream seed, index, shapes), so a run restored at
+      round r draws exactly round-r data (DESIGN.md §9).
+    """
 
     def __init__(self, vocab_size: int, seed: int = 0, n_chains: int = 4):
         self.vocab = vocab_size
+        self.seed = seed
         rng = np.random.default_rng(seed)
-        self.chains = []
-        for _ in range(n_chains):
-            # sparse transition structure
-            nxt = rng.integers(0, vocab_size, size=(vocab_size, 8))
-            self.chains.append(nxt)
+        # stacked sparse transition structure: (n_chains, vocab, 8)
+        self.chains = rng.integers(0, vocab_size,
+                                   size=(n_chains, vocab_size, 8),
+                                   dtype=np.int32)
+
         self._rng = np.random.default_rng(seed + 1)
+
+    def _walk(self, rng, batch_size: int, seq_len: int):
+        """(B, S+1) chain walk: per-sequence chain id, vectorized over B."""
+        cid = rng.integers(self.chains.shape[0], size=batch_size)
+        start = rng.integers(self.vocab, size=batch_size)
+        branch = rng.integers(8, size=(batch_size, seq_len))
+        out = np.empty((batch_size, seq_len + 1), dtype=np.int32)
+        out[:, 0] = start
+        for s in range(seq_len):
+            out[:, s + 1] = self.chains[cid, out[:, s], branch[:, s]]
+        return out
 
     def batch(self, batch_size: int, seq_len: int):
         """Returns (tokens, labels) int32 of shape (B, S); labels = next token."""
-        out = np.empty((batch_size, seq_len + 1), dtype=np.int32)
-        for b in range(batch_size):
-            chain = self.chains[self._rng.integers(len(self.chains))]
-            t = self._rng.integers(self.vocab)
-            for s in range(seq_len + 1):
-                out[b, s] = t
-                t = chain[t, self._rng.integers(8)]
+        out = self._walk(self._rng, batch_size, seq_len)
+        return out[:, :-1], out[:, 1:]
+
+    def batch_at(self, index: int, batch_size: int, seq_len: int):
+        """Stateless ``batch``: draw batch ``index`` of the stream. Same
+        (seed, index, shapes) always yields the same arrays."""
+        rng = np.random.default_rng((self.seed, int(index)))
+        out = self._walk(rng, batch_size, seq_len)
         return out[:, :-1], out[:, 1:]

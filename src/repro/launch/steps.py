@@ -75,7 +75,7 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                      het_sigma: float = 0.6,
                      local_steps: Optional[tuple] = None,
                      asynchrony: Optional[engine.AsyncSpec] = None,
-                     use_fused_kernel: bool = False):
+                     use_fused_kernel: bool = False, seed: int = 0):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
     if call is None:
@@ -191,7 +191,9 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                                          shard_plan=shard_plan)
 
     def step(state, batch):
-        key = jax.random.fold_in(jax.random.PRNGKey(0), state["round"])
+        # per-round key folded from the carried round counter: restart- and
+        # resume-invariant by construction (DESIGN.md §9)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), state["round"])
         return round_step(state, batch, key)
 
     # ---- shardings (see DESIGN.md §2) ----------------------------------------

@@ -1,8 +1,25 @@
 """End-to-end training driver for every engine method.
 
-On real TPU hardware this runs the full assigned configs on the production
-mesh; on CPU (this container) it runs reduced configs with synthetic LM data —
-the same code path: config -> model -> engine round loop -> checkpoint.
+Two launch paths share one spec resolution, data pipeline, round loop and
+checkpoint format (DESIGN.md §9):
+
+* ``--mesh none`` (default) — single-host ``jax.jit`` over the engine's
+  round step; runs anywhere, used by the CPU examples and tests.
+* ``--mesh production|production-2pod|debug`` — the launch-layer path:
+  ``steps.build_train_step`` builds the jitted step with the mesh plan's
+  shardings and donation (paper / paper_fsdp / plain modes, shard-mapped
+  fused local step on sharded plans, DESIGN.md §2/§7). The plan fixes the
+  client count M (e.g. 16 on the 16×16 production mesh in paper mode);
+  ``--clients`` applies to the single-host path only. Production meshes
+  on CPU need ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+  set before jax initializes (see launch/dryrun.py).
+
+Determinism and resume (DESIGN.md §9): the per-round key is
+``fold_in(PRNGKey(seed+1), r)`` on both paths (the mesh step folds the
+carried ``state["round"]`` counter), data is round-addressable
+(``LMRoundLoader.round_batch(r, ...)``), and modal stubs are seeded from
+(seed, round) — so train(T) ≡ train(t) + restore + train(T−t) bitwise in
+loss, state, and every log field except the wall-clock measurements.
 
 ``--method`` selects the round composition (ClientLoop × SyncStrategy ×
 ServerUpdate, see core/engine.py): savic (Algorithm 1), the FedOpt baselines
@@ -15,10 +32,14 @@ Examples:
       --preconditioner adam --scaling global --ckpt /tmp/ck
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
       --method local-adam --rounds 5 --clients 2 --batch 2 --seq 64
+  XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --mesh production --batch 16 --seq 4096 --use-fused-kernel
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -27,22 +48,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt_lib
-from repro.configs import get_config
+from repro.configs import ShapeConfig, get_config
 from repro.core import PrecondConfig, SavicConfig, engine, savic
 from repro.data import LMRoundLoader, TokenStream
 from repro.data import federated
 from repro.models import ModelCallConfig, build
 
 
-def main(argv=None):
+def _parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--h-local", type=int, default=4)
-    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="client count M (single-host path; mesh plans fix M "
+                         "from the client axes)")
     ap.add_argument("--batch", type=int, default=8, help="per-client batch")
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "debug", "production", "production-2pod"],
+                    help="route the launch through steps.build_train_step on "
+                         "this mesh (none = single-host jax.jit fallback)")
+    ap.add_argument("--mesh-shape", default="2x2",
+                    help="data×model shape for --mesh debug, e.g. 1x1 / 2x4")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "paper", "paper_fsdp", "plain", "diloco"],
+                    help="mesh axis plan (auto: plain for BIG_ARCHS else "
+                         "paper; see DESIGN.md §2)")
     ap.add_argument("--method", default="savic", choices=list(engine.METHODS))
     ap.add_argument("--preconditioner", default="adam",
                     choices=["identity", "adam", "rmsprop", "oasis",
@@ -84,28 +117,38 @@ def main(argv=None):
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="flat-buffer fused client loop: one Pallas pass per "
                          "local step, every preconditioner kind (DESIGN.md "
-                         "§7; bit-identical in fp32). On mesh launches "
-                         "(steps.py) model-/FSDP-sharded plans run it "
-                         "per-shard via shard_map; this single-host driver "
-                         "uses the unsharded flat view")
+                         "§7; bit-identical in fp32). Mesh launches run it "
+                         "per-shard via shard_map on model-/FSDP-sharded "
+                         "plans; the single-host path uses the unsharded "
+                         "flat view")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--log", default="")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dtype", default="float32")
-    args = ap.parse_args(argv)
+    return ap
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    call = ModelCallConfig(dtype=getattr(jnp, args.dtype))
-    model = build(cfg, call)
 
+def _make_mesh(args):
+    if args.mesh == "none":
+        return None
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    if args.mesh == "debug":
+        shape = tuple(int(x) for x in args.mesh_shape.split("x"))
+        return make_debug_mesh(shape)
+    return make_production_mesh(multi_pod=args.mesh == "production-2pod")
+
+
+def _resolve_spec(args, n_clients):
+    """CLI knobs -> (EngineSpec, local_steps, step_times); shared by the mesh
+    and single-host paths so both train the identical round composition."""
     comp = engine.CompressionSpec(op=args.compression, k=args.compression_k,
                                   error_feedback=args.error_feedback)
     asy = engine.AsyncSpec(buffer_rounds=args.async_buffer,
                            weighting=args.staleness_weight)
     local_steps = None
     step_times = federated.sample_step_times(
-        args.het_model, args.clients, seed=args.het_seed, sigma=args.het_sigma)
+        args.het_model, n_clients, seed=args.het_seed, sigma=args.het_sigma)
     if args.het_model != "uniform":
         local_steps = tuple(int(h) for h in federated.local_steps_from_times(
             step_times, args.h_local))
@@ -128,13 +171,34 @@ def main(argv=None):
             sync_dtype=args.sync_dtype, compression=comp,
             local_steps=local_steps, asynchrony=asy,
             use_fused_kernel=args.use_fused_kernel)
-    round_step = jax.jit(engine.build_round_step(model.loss, spec))
+    return spec, local_steps, step_times
+
+
+def main(argv=None):
+    args = _parser().parse_args(argv)
+    cfg = get_config(args.arch, reduced=args.reduced)
+    call = ModelCallConfig(dtype=getattr(jnp, args.dtype))
+    mesh = _make_mesh(args)
+
+    if mesh is not None:
+        from repro.launch import steps as steps_mod
+        plan, plan_mode = steps_mod._train_plan(args.arch, mesh, args.mode)
+        M = plan.clients(mesh) if plan.client else 1
+        if M != args.clients:
+            print(f"[train] mesh plan '{plan_mode}' fixes M={M} clients "
+                  f"(--clients {args.clients} ignored)", flush=True)
+    else:
+        M = args.clients
+
+    spec, local_steps, step_times = _resolve_spec(args, M)
+    model = build(cfg, call)
+
     wire = engine.bytes_on_wire(spec, jax.eval_shape(model.init,
                                                      jax.random.PRNGKey(0)))
     print(f"[train] sync payload/client/round: {wire['total_bytes']/1e6:.3f} "
           f"MB ({wire['compression_x']}x vs uncompressed)", flush=True)
     sim_t = federated.simulated_round_time(
-        step_times, local_steps or [args.h_local] * args.clients,
+        step_times, local_steps or [args.h_local] * M,
         barrier="async" if args.async_buffer else "sync",
         buffer_rounds=args.async_buffer)
     if args.het_model != "uniform" or args.async_buffer:
@@ -143,42 +207,77 @@ def main(argv=None):
               f"buffer={args.async_buffer} simulated round time {sim_t:.3f} "
               f"(rel. units)", flush=True)
 
+    if mesh is not None:
+        shape = ShapeConfig(f"train_cli_{args.seq}", args.seq,
+                            M * args.batch, "train")
+        built = steps_mod.build_train_step(
+            args.arch, shape, mesh, mode=args.mode, engine_spec=spec,
+            reduced=args.reduced, h_local=args.h_local, call=call,
+            seed=args.seed + 1)
+        spec = built.meta["engine_spec"]   # fused fallback may have applied
+        if "fused_kernel_fallback" in built.meta:
+            print(f"[train] fused kernel fallback: "
+                  f"{built.meta['fused_kernel_fallback']}", flush=True)
+        state_shardings, batch_shardings = built.in_shardings
+        jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings,
+                         donate_argnums=built.donate)
+        print(f"[train] mesh {dict(mesh.shape)} mode={built.meta['mode']} "
+              f"M={M} b_client={args.batch} devices={mesh.size}", flush=True)
+        run_step = lambda state, batch, r: jitted(state, batch)
+        put_batch = lambda nb: jax.device_put(nb, batch_shardings)
+    else:
+        round_step = jax.jit(engine.build_round_step(model.loss, spec))
+        root = jax.random.PRNGKey(args.seed + 1)
+        # fold_in(root, r), NOT sequential splits from process start: a
+        # restored run replays exactly round r's key (DESIGN.md §9)
+        run_step = lambda state, batch, r: round_step(
+            state, batch, jax.random.fold_in(root, r))
+        put_batch = lambda nb: jax.tree.map(jnp.asarray, nb)
+
     state = engine.init_state(jax.random.PRNGKey(args.seed), model.init, spec,
-                              args.clients)
+                              M)
     start_round = 0
     if args.ckpt and ckpt_lib.latest_step(args.ckpt) is not None:
         state, start_round = ckpt_lib.restore(args.ckpt, state)
         print(f"[train] restored round {start_round}")
+    if mesh is not None:
+        state = jax.device_put(state, state_shardings)
 
     stream = TokenStream(cfg.vocab_size, seed=args.seed)
-    loader = LMRoundLoader(stream, args.clients, args.batch)
-    key = jax.random.PRNGKey(args.seed + 1)
+    loader = LMRoundLoader(stream, M, args.batch)
+    tokens_round = M * args.h_local * args.batch * args.seq
     log = []
     t0 = time.time()
-    for r in range(start_round, args.rounds):
-        key, k = jax.random.split(key)
-        nb = loader.round_batch(args.h_local, args.seq)
-        if cfg.family in ("audio", "vlm"):
-            nb = _wrap_modal(cfg, nb, args)
-        batch = jax.tree.map(jnp.asarray, nb)
-        state, metrics = round_step(state, batch, k)
-        loss = float(metrics["loss"])
-        drift = float(metrics["client_drift"])
-        rec = {"round": r, "loss": loss, "drift": drift}
-        extra = ""
-        if "step_norm" in metrics:
-            rec["step_norm"] = float(metrics["step_norm"])
-            extra = f" step {rec['step_norm']:.3e}"
-        if "compression_err" in metrics:
-            rec["compression_err"] = float(metrics["compression_err"])
-        if "staleness" in metrics:
-            rec["staleness"] = float(metrics["staleness"])
-        rec["sim_time"] = round((r + 1) * sim_t, 4)  # simulated wall clock
-        log.append(rec)
-        print(f"[train] round {r:4d} loss {loss:.4f} drift {drift:.3e}"
-              f"{extra} ({time.time()-t0:.1f}s)", flush=True)
-        if args.ckpt and (r + 1) % args.ckpt_every == 0:
-            ckpt_lib.save(args.ckpt, r + 1, state)
+    with mesh if mesh is not None else contextlib.nullcontext():
+        for r in range(start_round, args.rounds):
+            nb = loader.round_batch(r, args.h_local, args.seq)
+            if cfg.family in ("audio", "vlm"):
+                nb = _wrap_modal(cfg, nb, args.seed, r)
+            batch = put_batch(nb)
+            tw = time.perf_counter()
+            state, metrics = run_step(state, batch, r)
+            loss = float(metrics["loss"])          # blocks on the round
+            wall = time.perf_counter() - tw
+            drift = float(metrics["client_drift"])
+            rec = {"round": r, "loss": loss, "drift": drift}
+            extra = ""
+            if "step_norm" in metrics:
+                rec["step_norm"] = float(metrics["step_norm"])
+                extra = f" step {rec['step_norm']:.3e}"
+            if "compression_err" in metrics:
+                rec["compression_err"] = float(metrics["compression_err"])
+            if "staleness" in metrics:
+                rec["staleness"] = float(metrics["staleness"])
+            rec["sim_time"] = round((r + 1) * sim_t, 4)  # simulated wall clock
+            # measurements — the only non-deterministic log fields (§9)
+            rec["wall_s"] = round(wall, 4)
+            rec["tokens_per_s"] = round(tokens_round / wall, 1)
+            log.append(rec)
+            print(f"[train] round {r:4d} loss {loss:.4f} drift {drift:.3e}"
+                  f"{extra} ({time.time()-t0:.1f}s)", flush=True)
+            if args.ckpt and (r + 1) % args.ckpt_every == 0:
+                ckpt_lib.save(args.ckpt, r + 1, state)
     if args.ckpt:
         ckpt_lib.save(args.ckpt, args.rounds, state)
     if args.log:
@@ -187,16 +286,25 @@ def main(argv=None):
     return log
 
 
-def _wrap_modal(cfg, nb, args):
-    """audio/vlm batches need embedding/patch stubs around the token stream."""
-    rng = np.random.default_rng(0)
+def _wrap_modal(cfg, nb, seed, r):
+    """audio/vlm batches need embedding/patch stubs around the token stream.
+
+    Seeded from (seed, round): every round draws fresh modal inputs (a fresh
+    ``default_rng(0)`` here used to freeze audio/vlm training on ONE batch
+    forever), and the same round reproduces bitwise on resume (DESIGN.md §9).
+    The trailing 1 separates this stream from TokenStream.batch_at(r)'s.
+    """
+    rng = np.random.default_rng((seed, r, 1))
     M, H, b, S = nb["tokens"].shape
     if cfg.family == "audio":
         emb = rng.normal(size=(M, H, b, S, cfg.d_model)).astype(np.float32) * .02
         return {"embeds": emb, "labels": nb["labels"]}
     P = cfg.frontend_tokens
+    # batch_struct contract: P patch embeddings prepended to S−P text tokens,
+    # so the model's position budget stays at --seq on both launch paths
     patches = rng.normal(size=(M, H, b, P, cfg.d_model)).astype(np.float32) * .02
-    return {"patches": patches, "tokens": nb["tokens"], "labels": nb["labels"]}
+    return {"patches": patches, "tokens": nb["tokens"][..., :S - P],
+            "labels": nb["labels"][..., :S - P]}
 
 
 if __name__ == "__main__":
