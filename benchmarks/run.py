@@ -48,6 +48,7 @@ under results/bench/.
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
 
@@ -56,16 +57,44 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+_GIT_REV = None
+
+
+def _git_rev():
+    """Short git rev of the tree the numbers came from (benchmark hygiene:
+    every emitted BENCH row is attributable to a commit). Cached; "unknown"
+    outside a git checkout."""
+    global _GIT_REV
+    if _GIT_REV is None:
+        import subprocess
+        try:
+            _GIT_REV = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip() or "unknown"
+        except Exception:
+            _GIT_REV = "unknown"
+    return _GIT_REV
 
 
 def _emit(rows, name):
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, f"{name}.csv")
+    rows = [{**r, "git_rev": _git_rev()} for r in rows]
     with open(path, "w") as f:
         if rows:
             f.write(",".join(rows[0].keys()) + "\n")
             for r in rows:
                 f.write(",".join(str(v) for v in r.values()) + "\n")
+    return path
+
+
+def _dump_json(name, payload):
+    """Write a BENCH_*.json at the repo root, stamped with the git rev."""
+    path = os.path.join(os.path.dirname(__file__), "..", name)
+    with open(path, "w") as f:
+        json.dump({**payload, "git_rev": _git_rev()}, f, indent=1)
     return path
 
 
@@ -318,8 +347,9 @@ def _time_round_loop(spec, init, loss, data, parts, rounds, H, M, seed):
         times.append((time.perf_counter() - t0) * 1e3)
     wire = engine.bytes_on_wire(
         spec, jax.eval_shape(init, jax.random.PRNGKey(seed)))
-    # only sampled clients transmit under partial participation
-    n_tx = max(1, int(round(spec.sync.participation * M)))
+    # only sampled clients transmit under partial participation (half-up to
+    # match engine.participation_weights — round() banker's-rounds 0.5·M)
+    n_tx = max(1, int(math.floor(spec.sync.participation * M + 0.5)))
     return {
         "round_ms_first": round(times[0], 3),        # includes compile
         "round_ms_mean": round(float(np.mean(times[1:])), 3),
@@ -359,14 +389,11 @@ def bench_engine(rounds=12, H=4, M=8, seed=0):
         rows.append({"method": method, **rec})
         out.append(("engine", f"round_ms_{method.replace('-', '_')}",
                     rec["round_ms_mean"]))
-    path_json = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_engine.json")
-    with open(path_json, "w") as f:
-        json.dump({"bench": "engine_round_walltime",
+    path_json = _dump_json("BENCH_engine.json", {"bench": "engine_round_walltime",
                    "config": {"model": "mlp_cls_reduced", "clients": M,
                               "h_local": H, "rounds": rounds,
                               "backend": jax.default_backend()},
-                   "methods": methods_json}, f, indent=1)
+                   "methods": methods_json})
     return out, _emit(rows, "engine")
 
 
@@ -421,14 +448,11 @@ def bench_compression(rounds=10, H=4, M=8, seed=0):
                           / ef_["wire_bytes_per_round"], 1)))
         out.append(("compression", f"round_ms_topk_ef_{method.replace('-', '_')}",
                     ef_["round_ms_mean"]))
-    path_json = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_compression.json")
-    with open(path_json, "w") as f:
-        json.dump({"bench": "compression_bytes_x_walltime",
+    path_json = _dump_json("BENCH_compression.json", {"bench": "compression_bytes_x_walltime",
                    "config": {"model": "mlp_cls_reduced", "clients": M,
                               "h_local": H, "rounds": rounds,
                               "backend": jax.default_backend()},
-                   "entries": entries}, f, indent=1)
+                   "entries": entries})
     return out, _emit(rows, "compression")
 
 
@@ -440,6 +464,14 @@ def bench_compression(rounds=10, H=4, M=8, seed=0):
 
 ASYNC_BENCH_BUFFER = 4       # staleness budget B for the async arm
 ASYNC_BENCH_SIGMA = 0.8      # lognormal straggler sigma
+# shared lr settings (bench_controller races on the same footing)
+ASYNC_BENCH_KW = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
+ASYNC_BENCH_OVERRIDES = {"local-adam": dict(eta_l=0.005, eta=0.02)}
+# staleness-scaled server lr for buffered arms (see bench_async docstring)
+ASYNC_BENCH_ASYNC_OVERRIDES = {"fedadagrad": dict(eta=0.025),
+                               "fedadam": dict(eta=0.015),
+                               "fedyogi": dict(eta=0.015),
+                               "local-adam": dict(eta=0.005)}
 
 
 def bench_async(rounds=30, H=6, M=8, seed=0):
@@ -483,12 +515,8 @@ def bench_async(rounds=30, H=6, M=8, seed=0):
                           weighting="polynomial")),
     }
     arm_rounds = {"sync": rounds, "async": ASYNC_BENCH_BUFFER * rounds}
-    overrides = {"local-adam": dict(eta_l=0.005, eta=0.02)}
-    # staleness-scaled server lr for the async arm (see docstring)
-    async_overrides = {"fedadagrad": dict(eta=0.025),
-                       "fedadam": dict(eta=0.015),
-                       "fedyogi": dict(eta=0.015),
-                       "local-adam": dict(eta=0.005)}
+    overrides = ASYNC_BENCH_OVERRIDES
+    async_overrides = ASYNC_BENCH_ASYNC_OVERRIDES
     rows, out = [], []
     entries = {}
     from repro.data import FederatedLoader
@@ -497,7 +525,7 @@ def bench_async(rounds=30, H=6, M=8, seed=0):
         target = None
         for arm, arm_kw in arms.items():
             init, loss, _ = _mlp(data.x.shape[1], 10)
-            kw = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
+            kw = dict(ASYNC_BENCH_KW)
             kw.update(overrides.get(method, {}))
             if arm == "async":
                 kw.update(async_overrides.get(method, {}))
@@ -540,10 +568,7 @@ def bench_async(rounds=30, H=6, M=8, seed=0):
                               / a["sim_time_to_target"], 2)))
         out.append(("async", f"final_loss_async_{method.replace('-', '_')}",
                     a["final_loss"]))
-    path_json = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_async.json")
-    with open(path_json, "w") as f:
-        json.dump({"bench": "async_simulated_walltime",
+    path_json = _dump_json("BENCH_async.json", {"bench": "async_simulated_walltime",
                    "config": {"model": "mlp_cls_reduced", "clients": M,
                               "h_local": H, "rounds": rounds,
                               "het_model": "lognormal",
@@ -554,8 +579,143 @@ def bench_async(rounds=30, H=6, M=8, seed=0):
                               "buffer_rounds": ASYNC_BENCH_BUFFER,
                               "staleness_weight": "polynomial",
                               "backend": jax.default_backend()},
-                   "methods": entries}, f, indent=1)
+                   "methods": entries})
     return out, _emit(rows, "async")
+
+
+# --------------------------------------------------------------------------- #
+# controller — adaptive knob schedule races the static arms of bench_async
+# --------------------------------------------------------------------------- #
+
+
+# Per-method controller tuning (the static arms get per-method lr overrides;
+# the controller arm gets per-method gns targets — same discipline). The GNS
+# scale is method-dependent: on this task at H_t=2 the gns EMA sits around
+# 3-7 for savic, ~12 for fedavg, ~8-9 for fedadagrad, ~5-8 for fedadam/yogi,
+# ~6 for local-adam. noise_target sits just above the early-phase plateau so
+# H_t grows only once accumulated heterogeneity noise crosses it; local-adam
+# diverges under tiny partial rounds, so it starts near the full budget and
+# grows immediately.
+CONTROLLER_H_MIN = 2            # >= 2 active clients; at h=1 the gns ratio
+                                # degenerates to M/n_act - 1 (no variance info)
+CONTROLLER_TUNE = {
+    "savic": dict(noise_target=8.0),
+    "fedavg": dict(noise_target=12.0),
+    "fedadagrad": dict(noise_target=8.5),
+    "fedadam": dict(noise_target=9.0),
+    "fedyogi": dict(noise_target=9.0),
+    "local-adam": dict(noise_target=5.0, h_min=5),
+}
+
+
+def bench_controller(rounds=30, H=6, M=8, seed=0):
+    """Adaptive communication-budget controller vs the best static config,
+    per method, on the SAME lognormal straggler trace / data / learning
+    rates as bench_async (DESIGN.md §10).
+
+    The controller arm starts at a cheap round shape (H_t = 2 under the
+    min(t)-bounded budget rule: 4 of 8 clients active, stragglers sitting
+    rounds out inside the staleness window) and grows H_t geometrically
+    while the gradient-noise-scale EMA exceeds its ``noise_target``. Its
+    per-round simulated time comes from the REALIZED knobs — the
+    ``ctrl_h_m``/``ctrl_b_eff`` metrics the engine logs — through the same
+    ``simulated_round_time`` systems model the static arms use, so the race
+    is apples-to-apples: cumulative simulated clock until the method's
+    recorded ``target_loss`` from BENCH_async.json (regenerated first if
+    missing). Inserts a "controller" entry per method into BENCH_async.json
+    next to the static sync/async arms.
+    """
+    from repro.core import engine
+    from repro.data import (ClassificationData, FederatedLoader,
+                            main_class_partition)
+    from repro.data.federated import sample_step_times, simulated_round_time
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    async_json = os.path.join(repo_root, "BENCH_async.json")
+    if not os.path.exists(async_json):
+        bench_async(rounds=rounds, H=H, M=M, seed=seed)
+    with open(async_json) as f:
+        base = json.load(f)
+
+    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
+    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
+    step_times = sample_step_times("lognormal", M, seed=seed,
+                                   sigma=ASYNC_BENCH_SIGMA)
+    n_rounds = ASYNC_BENCH_BUFFER * rounds   # same round count as async arm
+    rows, out = [], []
+    entries = base["methods"]
+    for method in ENGINE_BENCH_METHODS:
+        tune = dict(h_min=CONTROLLER_H_MIN)
+        tune.update(CONTROLLER_TUNE.get(method, {}))
+        ctrl = engine.ControllerSpec(
+            enabled=True, h_max=H, buffer_max=ASYNC_BENCH_BUFFER,
+            step_times=tuple(float(t) for t in step_times), **tune)
+        init, loss, _ = _mlp(data.x.shape[1], 10)
+        kw = dict(ASYNC_BENCH_KW)
+        kw.update(ASYNC_BENCH_OVERRIDES.get(method, {}))
+        kw.update(ASYNC_BENCH_ASYNC_OVERRIDES.get(method, {}))
+        spec = engine.method_spec(
+            method, **kw,
+            asynchrony=engine.AsyncSpec(buffer_rounds=ASYNC_BENCH_BUFFER,
+                                        weighting="polynomial"),
+            controller=ctrl)
+        step = jax.jit(engine.build_round_step(loss, spec))
+        state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
+        loader = FederatedLoader(data.x, data.y.astype(np.int32), parts[:M],
+                                 batch_size=32, seed=seed)
+        key = jax.random.PRNGKey(seed + 1)
+        target = entries[method]["sync"]["target_loss"]
+        times, losses, h_t_log = [], [], []
+        sim_elapsed, sim_hit, r_hit = 0.0, -1.0, -1
+        for _ in range(n_rounds):
+            key, k = jax.random.split(key)
+            batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
+            t0 = time.perf_counter()
+            state, met = step(state, batch, k)
+            jax.block_until_ready(state)
+            times.append((time.perf_counter() - t0) * 1e3)
+            # simulated clock advances by the round shape the controller
+            # actually realized this round
+            h_real = [int(h) for h in np.asarray(met["ctrl_h_m"])]
+            sim_elapsed += simulated_round_time(
+                step_times, h_real, barrier="async",
+                buffer_rounds=int(met["ctrl_b_eff"]))
+            losses.append(float(met["loss"]))
+            h_t_log.append(int(met["ctrl_h_t"]))
+            if r_hit < 0 and losses[-1] <= target:
+                r_hit, sim_hit = len(losses), round(sim_elapsed, 4)
+        # compact knob trajectory: (round, H_t) at each change point
+        h_t_changes = [[r, h] for r, h in enumerate(h_t_log)
+                       if r == 0 or h != h_t_log[r - 1]]
+        rec = {
+            "sim_time_total": round(sim_elapsed, 4),
+            "round_ms_mean": round(float(np.mean(times[1:])), 3),
+            "rounds": n_rounds,
+            "final_loss": round(losses[-1], 4),
+            "target_loss": target,
+            "rounds_to_target": r_hit,
+            "sim_time_to_target": sim_hit,
+            "h_t_trajectory": h_t_changes,
+            "b_eff": int(np.asarray(state["ctrl"]["b_eff"])),
+            "tune": tune,
+        }
+        entries[method]["controller"] = rec
+        rows.append({"method": method, "arm": "controller", **rec})
+        statics = [entries[method][a]["sim_time_to_target"]
+                   for a in ("sync", "async")
+                   if entries[method][a]["sim_time_to_target"] > 0]
+        mname = method.replace("-", "_")
+        out.append(("controller", f"sim_time_adaptive_{mname}", sim_hit))
+        if statics and sim_hit > 0:
+            out.append(("controller", f"sim_speedup_vs_best_static_{mname}",
+                        round(min(statics) / sim_hit, 2)))
+    base["config"]["controller"] = {
+        "h_min": CONTROLLER_H_MIN, "h_max": H,
+        "buffer_max": ASYNC_BENCH_BUFFER, "rounds": n_rounds,
+        "per_method_tune": CONTROLLER_TUNE,
+    }
+    _dump_json("BENCH_async.json", base)
+    return out, _emit(rows, "controller")
 
 
 # --------------------------------------------------------------------------- #
@@ -620,10 +780,7 @@ def bench_serve(batch=4, prompt_len=32, gen_len=16, seed=0):
         out.append(("serve", f"trace_throughput_x_continuous_{a}",
                     round(cont.metrics["tok_per_step"]
                           / max(stat.metrics["tok_per_step"], 1e-9), 2)))
-    path_json = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_serve.json")
-    with open(path_json, "w") as f:
-        json.dump({"bench": "serve_decode_path",
+    path_json = _dump_json("BENCH_serve.json", {"bench": "serve_decode_path",
                    "config": {"reduced": True, "batch": batch,
                               "prompt_len": prompt_len, "gen_len": gen_len,
                               "trace": {**SERVE_BENCH_TRACE,
@@ -632,7 +789,7 @@ def bench_serve(batch=4, prompt_len=32, gen_len=16, seed=0):
                                                  "prefill=0 steps"},
                               "warmup": True, "greedy": True,
                               "backend": jax.default_backend()},
-                   "archs": entries}, f, indent=1)
+                   "archs": entries})
     return out, _emit(rows, "serve")
 
 
@@ -878,10 +1035,7 @@ def bench_fused_step():
     out.extend(sh_out)
     _emit(sh_rows, "kernels_sharded")
 
-    path_json = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_kernels.json")
-    with open(path_json, "w") as f:
-        json.dump({
+    path_json = _dump_json("BENCH_kernels.json", {
             "bench": "fused_local_step_hbm_bytes",
             "config": {
                 "clients": FUSED_BENCH_M,
@@ -931,7 +1085,7 @@ def bench_fused_step():
                                    "rides through the scan).",
                 },
                 "plans": sh_rec["plans"],
-            }}, f, indent=1)
+            }})
     return out, rows
 
 
@@ -1094,10 +1248,7 @@ def bench_train_lm(rounds=10, H=8, M=4, b=4, seq=64, seed=0):
                      "sim_time_total": ""})
         out.append(("train_lm", f"tok_s_dev_proj_{p['shape']}",
                     p["tokens_per_s_per_device"]))
-    path_json = os.path.join(os.path.dirname(__file__), "..",
-                             "BENCH_train_lm.json")
-    with open(path_json, "w") as f:
-        json.dump({"bench": "train_lm",
+    path_json = _dump_json("BENCH_train_lm.json", {"bench": "train_lm",
                    "config": {"arch": f"{TRAIN_LM_ARCH}-reduced",
                               "clients": M, "h_local": H,
                               "batch_per_client": b, "seq": seq,
@@ -1106,7 +1257,7 @@ def bench_train_lm(rounds=10, H=8, M=4, b=4, seq=64, seed=0):
                               "backend": jax.default_backend(),
                               "n_devices": n_dev},
                    "methods": methods_json,
-                   "full_shape_projection": proj}, f, indent=1)
+                   "full_shape_projection": proj})
     return out, _emit(rows, "train_lm")
 
 
@@ -1118,6 +1269,7 @@ BENCHES = {
     "engine": bench_engine,
     "compression": bench_compression,
     "async": bench_async,
+    "controller": bench_controller,
     "comm": bench_comm,
     "kernels": bench_kernels,
     "serve": bench_serve,

@@ -1,0 +1,246 @@
+"""Adaptive communication-budget controller (DESIGN.md §10).
+
+Every communication knob of the round engine — per-client local steps H_m,
+compression fraction k, async buffer depth B — is a static spec constant.
+This module adapts them *during* training as a pure, jit-compatible layer:
+
+    ctrl_state, knobs = controller_step(spec, ctrl_state, obs)
+
+driven by three per-round signals the engine already produces:
+
+  * **Gradient-noise scale** from the per-client round deltas
+    (Lau et al., arXiv:2406.13936 — adaptive batch-size/local-step growth):
+    with Δ_m = x_{m,H_m} − x_t the ratio
+
+        gns = (E_m‖Δ_m‖² − ‖Δ̄‖²) / ‖Δ̄‖²
+
+    estimates noise/signal of the update stream. While its EMA exceeds
+    ``noise_target`` the global step budget H_t grows geometrically
+    (small cheap rounds early, full-budget rounds once noise dominates) —
+    the local-step analogue of critical-batch-size growth.
+  * **Error-feedback residual norm** guards the compression schedule:
+    the EMA of ‖u − C(u)‖/‖u‖ (the compressor's observed contraction on its
+    actual input, EF-carry included) above ``resid_guard`` grows k toward
+    ``k_max``; below it, k decays toward ``k_min`` — spend bytes only when
+    the residual shows the wire is dropping signal.
+  * **Straggler spread** selects the async depth: with relative step times
+    t_m, the spread max(t)/min(t) divided by ``spread_per_slot`` picks how
+    many staleness slots b_eff ∈ [1, buffer_max] the server actually
+    weights (the engine masks staleness weights to ages < b_eff).
+
+H_m allocation is the fixed wall-clock-budget rule of
+``data.federated.local_steps_from_times`` — budget = H_t · min(t), client m
+runs ⌊budget/t_m⌋ steps — with one deliberate extension: when a staleness
+buffer is available (``buffer_max > 0``), clients slower than the whole
+budget sit the round out (H_m = 0, FedBuff semantics: their contribution
+is covered by the staleness window), so the simulated round time is
+bounded by H_t · min(t) instead of the slowest straggler. Without a buffer
+the ≥ 1 floor of the static rule is kept.
+
+Everything is float32/int32 state in the ``state["ctrl"]`` pytree leaf, so
+checkpointing, donation and sharding flow through the existing engine
+machinery unchanged, and ``tests/_reference_controller.py`` replays the
+whole trajectory in numpy. ``enabled=False`` (the default) adds no state
+leaf and changes no engine program — the bit-exact identity contract of
+DESIGN.md §6, pinned in tests/test_controller.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+_TINY = 1e-12
+
+
+def _ema_update(ema: float, old, new):
+    """old·ema + new·(1−ema).
+
+    NB: LLVM may contract the mul+add into an FMA (single rounding), so the
+    numpy oracle (tests/_reference_controller.py) replays the float EMAs to
+    within 1 ulp, not bitwise. Every INTEGER knob (H_t, H_m, b_eff) goes
+    through exact python-int lookup tables below precisely so those replay
+    bitwise regardless — float rounding never reaches a floor()."""
+    return ema * old + (1.0 - ema) * new
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerSpec:
+    """Knob schedule parameters. ``enabled=False`` is the identity."""
+    enabled: bool = False
+    # ---- H_m / local-step growth (Lau et al., arXiv:2406.13936) ----------
+    h_min: int = 1                 # initial global step budget H_t
+    h_max: int = 8                 # cap; must be <= the round's H (traced)
+    noise_target: float = 1.0      # grow H_t while gns EMA exceeds this
+    h_growth: float = 1.5          # geometric growth factor (>= next int)
+    ema: float = 0.7               # EMA retention for gns / residual stats
+    # ---- compression-k schedule, EF-residual-norm guarded ----------------
+    k_min: float = 0.05
+    k_max: float = 1.0             # also the initial k
+    resid_guard: float = 0.5       # ‖u − C(u)‖/‖u‖ EMA above this grows k
+    k_shrink: float = 0.8
+    k_growth: float = 1.25
+    # ---- async depth from the observed straggler spread ------------------
+    buffer_max: int = 0            # 0 = depth not managed (b_eff fixed at 1)
+    spread_per_slot: float = 1.0   # one staleness slot per this much spread
+    # ---- the observed straggler trace (relative step times, len M) -------
+    step_times: tuple = ()         # () = homogeneous clients
+
+    def __post_init__(self):
+        if self.h_min < 1 or self.h_max < self.h_min:
+            raise ValueError(f"need 1 <= h_min <= h_max, got "
+                             f"[{self.h_min}, {self.h_max}]")
+        if not 0.0 < self.ema < 1.0:
+            raise ValueError(f"ema={self.ema}; expected 0 < ema < 1")
+        if not 0.0 < self.k_min <= self.k_max <= 1.0:
+            raise ValueError(f"need 0 < k_min <= k_max <= 1, got "
+                             f"[{self.k_min}, {self.k_max}]")
+        if not 0.0 < self.k_shrink <= 1.0:
+            raise ValueError(f"k_shrink={self.k_shrink}")
+        if self.k_growth < 1.0:
+            raise ValueError(f"k_growth={self.k_growth}; expected >= 1")
+        if self.h_growth <= 1.0:
+            raise ValueError(f"h_growth={self.h_growth}; expected > 1")
+        if self.resid_guard <= 0.0 or self.spread_per_slot <= 0.0:
+            raise ValueError("resid_guard and spread_per_slot must be > 0")
+        if self.buffer_max < 0:
+            raise ValueError(f"buffer_max={self.buffer_max}")
+        ts = tuple(float(t) for t in self.step_times)
+        if any(t <= 0.0 for t in ts):
+            raise ValueError("step_times must be positive")
+        object.__setattr__(self, "step_times", ts)
+
+
+def half_up(x: float) -> int:
+    """Half-up integer rounding — round(2.5) banker's-rounds to 2; this is 3."""
+    return int(math.floor(x + 0.5))
+
+
+def buffer_depth(spec: ControllerSpec) -> int:
+    """Selected staleness depth b_eff from the observed straggler spread.
+
+    One slot per ``spread_per_slot`` of max(t)/min(t), clipped to
+    [1, buffer_max]; 1 when depth is unmanaged (buffer_max = 0) or the trace
+    is homogeneous. A spec constant — the engine masks staleness weights to
+    ages < b_eff, so a shallow selection on a mild trace costs nothing.
+    """
+    if spec.buffer_max <= 0:
+        return 1
+    spread = (max(spec.step_times) / min(spec.step_times)
+              if spec.step_times else 1.0)
+    return max(1, min(spec.buffer_max, half_up(spread / spec.spread_per_slot)))
+
+
+def budget_table(spec: ControllerSpec, n_clients: int) -> tuple:
+    """Row h = the per-client H_m vector for global budget H_t = h.
+
+    Exact python-double math mirroring ``data.federated.local_steps_from_times``
+    (budget = h · min(t), client m runs ⌊budget/t_m⌋ steps), except that with
+    a staleness buffer available the ≥1 floor drops to 0 (stragglers sit the
+    round out). The controller indexes this table in-trace, so the integer
+    H_m schedule is independent of float32 rounding and replays bitwise in
+    the numpy oracle."""
+    ts = spec.step_times
+    if ts and len(ts) != n_clients:
+        raise ValueError(f"step_times has {len(ts)} entries for "
+                         f"{n_clients} clients")
+    if not ts:
+        ts = (1.0,) * n_clients
+    lo = 0 if spec.buffer_max > 0 else 1
+    tmin = min(ts)
+    return tuple(
+        tuple(max(lo, min(h, int(math.floor(h * tmin / t + 1e-6))))
+              for t in ts)
+        for h in range(spec.h_max + 1))
+
+
+def growth_table(spec: ControllerSpec) -> tuple:
+    """grown[h] = min(h_max, max(h+1, half_up(h · h_growth))) — the H_t
+    geometric-growth step, precomputed in exact python math."""
+    return tuple(
+        min(spec.h_max, max(h + 1, half_up(h * spec.h_growth)))
+        for h in range(spec.h_max + 1))
+
+
+def budget_h(spec: ControllerSpec, h_t, n_clients: int):
+    """Per-client H_m under the wall-clock budget h_t · min(t): a traced
+    lookup into the exact ``budget_table`` (h_t is a traced i32 scalar)."""
+    table = jnp.asarray(budget_table(spec, n_clients), jnp.int32)
+    return table[jnp.asarray(h_t, jnp.int32)]
+
+
+def init_ctrl_state(spec: ControllerSpec, n_clients: int) -> dict:
+    """The ``state["ctrl"]`` leaf: this-round knobs + EMA statistics.
+
+    ``h_m``/``k``/``b_eff`` are the knobs the NEXT ``round_step`` call will
+    realize; ``controller_step`` rolls them forward from the round's
+    observations. All leaves are arrays, so the controller checkpoints
+    bitwise through ``checkpoint.save/restore`` with zero special cases.
+    """
+    return {
+        "t": jnp.int32(0),
+        "gns_ema": jnp.float32(0.0),
+        "resid_ema": jnp.float32(0.0),
+        "h_t": jnp.int32(spec.h_min),
+        "h_m": budget_h(spec, spec.h_min, n_clients),
+        "k": jnp.float32(spec.k_max),
+        "b_eff": jnp.int32(buffer_depth(spec)),
+    }
+
+
+def controller_step(spec: ControllerSpec, ctrl_state: dict, obs: dict):
+    """Pure knob update: (ctrl_state, obs) -> (ctrl_state', knobs).
+
+    ``obs`` holds this round's scalars, all float32:
+      delta_sq_mean  E_m‖Δ_m‖² over the raw per-client round deltas
+      delta_sq_avg   ‖(1/M)Σ_m Δ_m‖²
+      payload_sq     Σ_m‖u_m‖² of the compressor input (0: no compression)
+      resid_sq       Σ_m‖u_m − C(u_m)‖² dropped by the wire (0: none)
+
+    Replayed by tests/_reference_controller.py (numpy oracle): integer knobs
+    (H_t, H_m, b_eff) bitwise via the exact lookup tables; float EMAs to
+    within 1 ulp (LLVM may contract their mul+add into an FMA).
+    """
+    M = ctrl_state["h_m"].shape[0]
+    first = ctrl_state["t"] == 0
+
+    # -- gradient-noise scale -> monotone H_t growth -----------------------
+    d2m = jnp.asarray(obs["delta_sq_mean"], jnp.float32)
+    d2a = jnp.asarray(obs["delta_sq_avg"], jnp.float32)
+    gns = jnp.maximum(d2m - d2a, 0.0) / jnp.maximum(d2a, _TINY)
+    gns_ema = jnp.where(first, gns,
+                        _ema_update(spec.ema, ctrl_state["gns_ema"], gns))
+    h_t = ctrl_state["h_t"]
+    grown = jnp.asarray(growth_table(spec), jnp.int32)[h_t]
+    h_t = jnp.where(gns_ema > spec.noise_target, grown, h_t)
+    h_m = budget_h(spec, h_t, M)
+
+    # -- EF-residual-norm guard -> compression-k schedule ------------------
+    payload = jnp.asarray(obs["payload_sq"], jnp.float32)
+    resid = jnp.asarray(obs["resid_sq"], jnp.float32)
+    ratio = jnp.sqrt(resid / jnp.maximum(payload, _TINY))
+    resid_ema = jnp.where(
+        payload > 0.0,
+        jnp.where(first, ratio,
+                  _ema_update(spec.ema, ctrl_state["resid_ema"], ratio)),
+        ctrl_state["resid_ema"])
+    k = ctrl_state["k"]
+    k = jnp.where(
+        payload > 0.0,
+        jnp.where(resid_ema > spec.resid_guard,
+                  jnp.minimum(k * spec.k_growth, spec.k_max),
+                  jnp.maximum(k * spec.k_shrink, spec.k_min)),
+        k).astype(jnp.float32)
+
+    new_state = {
+        "t": ctrl_state["t"] + 1,
+        "gns_ema": gns_ema.astype(jnp.float32),
+        "resid_ema": resid_ema.astype(jnp.float32),
+        "h_t": h_t.astype(jnp.int32),
+        "h_m": h_m,
+        "k": k,
+        "b_eff": jnp.int32(buffer_depth(spec)),
+    }
+    knobs = {"h_m": h_m, "k": k, "b_eff": new_state["b_eff"]}
+    return new_state, knobs

@@ -31,7 +31,7 @@ adaptive server's (m, v) are client-replicated (no M dim). The state pytree is
 
     {"params": (M, ...), "mom": (M, ...), "precond": {...}, "round": i32,
      ["server": {"m": (...), "v": (...)}], ["ef": (M, ...)],
-     ["buffer": (B, ...)]}
+     ["buffer": (B, ...)], ["ctrl": {...}]}
 
 with the ``server`` entry present only for adaptive-server methods, the
 ``ef`` error-feedback residual (per-client, shaped like ``params``) present
@@ -48,11 +48,14 @@ engine; new methods are a ~50-line preset (see ``method_spec``).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import controller as CTRL
+from repro.core.controller import ControllerSpec
 from repro.core import preconditioner as PC
 from repro.core.preconditioner import PrecondConfig
 from repro.utils.flatten import FlatLayout, all_float32
@@ -225,7 +228,18 @@ class SyncSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ServerSpec:
-    """What the server does with the sync average."""
+    """What the server does with the sync average.
+
+    ``sync_dtype`` / ``sync_k`` compress the **server** adaptive state m/v
+    (arXiv:2109.05109 regime): replicas agreeing on the adaptive server step
+    only need the compressed view, so the per-round server-state sync leg
+    stops scaling with the full fp32 m/v trees. ``sync_k < 1`` keeps one
+    shared largest-|m| index set per leaf for both trees (a dropped
+    coordinate contributes no step; its v falls back to the v_init floor);
+    ``sync_dtype`` round-trips both trees through that dtype (QDQ behind
+    optimization barriers, same discipline as ``SyncSpec.sync_dtype``).
+    Defaults are the identity: bit-exact pre-feature program.
+    """
     kind: str = "average"          # "average" (Alg. 1) | "adaptive" ([42])
     opt: str = "adam"              # adagrad | adam | yogi   (adaptive only)
     eta: float = 0.1               # server lr η
@@ -233,6 +247,8 @@ class ServerSpec:
     beta2: float = 0.999
     tau: float = 1e-3              # adaptivity floor τ
     v_init: Optional[float] = None # v_{-1}; default τ² (the §5.2 pain point)
+    sync_dtype: str = ""           # m/v sync dtype ("" = full precision)
+    sync_k: float = 1.0            # kept fraction of the m/v trees (top-|m|)
 
     def __post_init__(self):
         if self.kind not in ("average", "adaptive"):
@@ -240,6 +256,21 @@ class ServerSpec:
         if self.kind == "adaptive" and self.opt not in ("adagrad", "adam",
                                                         "yogi"):
             raise ValueError(self.opt)
+        if not 0.0 < self.sync_k <= 1.0:
+            raise ValueError(f"sync_k={self.sync_k}; expected 0 < k <= 1")
+        if self.sync_dtype:
+            try:
+                jnp.dtype(self.sync_dtype)
+            except TypeError:
+                raise ValueError(f"sync_dtype {self.sync_dtype!r} is not a "
+                                 f"dtype") from None
+        if self.kind == "average" and not self.sync_identity():
+            raise ValueError("server sync_dtype/sync_k compress the adaptive "
+                             "m/v state; an averaging server has none")
+
+    def sync_identity(self) -> bool:
+        """True iff the server m/v state moves uncompressed (bit-exact)."""
+        return not self.sync_dtype and self.sync_k >= 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,6 +279,15 @@ class EngineSpec:
     sync: SyncSpec = SyncSpec()
     server: ServerSpec = ServerSpec()
     precond: PrecondConfig = PrecondConfig(kind="identity")
+    # adaptive communication-budget controller (core/controller.py,
+    # DESIGN.md §10); the disabled default adds no state leaf and changes
+    # no program
+    controller: ControllerSpec = ControllerSpec()
+
+    def __post_init__(self):
+        if not isinstance(self.controller, ControllerSpec):
+            raise ValueError(f"controller must be a ControllerSpec, got "
+                             f"{type(self.controller).__name__}")
 
 
 # --------------------------------------------------------------------------- #
@@ -268,6 +308,8 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
                 local_steps: Optional[tuple] = None,
                 asynchrony=None, async_buffer: int = 0,
                 staleness_weight: str = "constant",
+                server_sync_dtype: str = "", server_sync_k: float = 1.0,
+                controller: Optional[ControllerSpec] = None,
                 use_fused_kernel: bool = False) -> EngineSpec:
     """Canonical EngineSpec for each named method.
 
@@ -291,7 +333,9 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
     ``local_steps`` (per-client H_m) and ``asynchrony`` (an AsyncSpec; or the
     ``async_buffer``/``staleness_weight`` shorthand) are engine-level too:
     every method runs under systems heterogeneity and a staleness-buffered
-    server (DESIGN.md §5).
+    server (DESIGN.md §5). ``controller`` (a ControllerSpec) and the
+    ``server_sync_dtype``/``server_sync_k`` server-state compression are
+    likewise method-agnostic (DESIGN.md §10).
     """
     comp = compression if isinstance(compression, CompressionSpec) \
         else CompressionSpec(op=compression, k=compression_k,
@@ -305,44 +349,54 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
         # one source of truth for the SAVIC composition: SavicConfig ->
         # engine_spec in core/savic.py (lazy import; savic imports engine)
         from repro.core.savic import SavicConfig, engine_spec
-        return engine_spec(
+        spec = engine_spec(
             PrecondConfig(kind=pc_kind, alpha=alpha),
             SavicConfig(gamma=gamma, beta1=beta1, scaling=scaling,
                         use_fused_kernel=use_fused_kernel,
                         participation=participation, sync_dtype=sync_dtype,
                         compression=comp, local_steps=local_steps,
                         asynchrony=asy))
-    if method == "fedavg":
+    elif method == "fedavg":
         # plain Local SGD clients (no momentum), plain average — textbook
         # FedAvg; heavy-ball local SGD is savic with pc_kind="identity"
-        return EngineSpec(
+        spec = EngineSpec(
             client=ClientLoopSpec(lr=eta_l, momentum=0.0,
                                   use_fused_kernel=use_fused_kernel,
                                   local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="average"),
             precond=PrecondConfig(kind="identity"))
-    if method in ("fedadagrad", "fedadam", "fedyogi"):
-        return EngineSpec(
+    elif method in ("fedadagrad", "fedadam", "fedyogi"):
+        spec = EngineSpec(
             client=ClientLoopSpec(lr=eta_l, momentum=0.0, reset_momentum=True,
                                   use_fused_kernel=use_fused_kernel,
                                   local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="adaptive", opt=method[3:], eta=eta,
                               beta1=server_beta1, beta2=server_beta2, tau=tau,
-                              v_init=v_init),
+                              v_init=v_init, sync_dtype=server_sync_dtype,
+                              sync_k=server_sync_k),
             precond=PrecondConfig(kind="identity"))
-    if method == "local-adam":
-        return EngineSpec(
+    elif method == "local-adam":
+        spec = EngineSpec(
             client=ClientLoopSpec(lr=eta_l, momentum=beta1, scaling="local",
                                   use_fused_kernel=use_fused_kernel,
                                   local_steps=local_steps),
             sync=dataclasses.replace(sync, average_momentum=False),
             server=ServerSpec(kind="adaptive", opt="adam", eta=eta,
                               beta1=server_beta1, beta2=server_beta2, tau=tau,
-                              v_init=v_init),
+                              v_init=v_init, sync_dtype=server_sync_dtype,
+                              sync_k=server_sync_k),
             precond=PrecondConfig(kind=pc_kind, alpha=alpha))
-    raise ValueError(f"method {method}; expected one of {METHODS}")
+    else:
+        raise ValueError(f"method {method}; expected one of {METHODS}")
+    if spec.server.kind == "average" and (server_sync_dtype
+                                          or server_sync_k < 1.0):
+        raise ValueError(f"{method} has an averaging server: no adaptive "
+                         f"m/v state to compress")
+    if controller is not None:
+        spec = dataclasses.replace(spec, controller=controller)
+    return spec
 
 
 # --------------------------------------------------------------------------- #
@@ -388,6 +442,10 @@ def init_state(key, init_params_fn, spec: EngineSpec, n_clients: int):
         state["buffer"] = jax.tree.map(
             lambda p: jnp.zeros((asy.buffer_rounds,) + p.shape, p.dtype),
             params)
+    if spec.controller.enabled:
+        # controller knobs + EMA stats (DESIGN.md §10): small scalar/(M,)
+        # leaves that ride the state pytree through checkpoint/shard/donate
+        state["ctrl"] = CTRL.init_ctrl_state(spec.controller, n_clients)
     return state
 
 
@@ -433,9 +491,12 @@ def _apply_update(params, mom, grads, pstate, spec: EngineSpec):
 def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None):
     """H local steps, vmap-over-M inside a lax.scan over H.
 
-    Returns ``run(params_m, mom_m, pstate, micro, keys) ->
+    Returns ``run(params_m, mom_m, pstate, micro, keys, h_m=None) ->
     (params_m, mom_m, pstate, last_grads, losses)`` with micro/keys leading
-    (H, M) dims and losses shaped (H, M).
+    (H, M) dims and losses shaped (H, M). ``h_m`` is an optional TRACED (M,)
+    int32 per-client step budget (the controller's round-addressable H_m,
+    DESIGN.md §10): same masking machinery as the static ``local_steps``
+    vector but with the bound read from state — no recompile as it moves.
     """
     cl, pc = spec.client, spec.precond
 
@@ -454,16 +515,19 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None):
 
     global_d = cl.scaling == "global"
 
-    def run(params_m, mom_m, pstate, micro, keys):
+    def run(params_m, mom_m, pstate, micro, keys, h_m=None):
         H = jax.tree.leaves(micro)[0].shape[0]
         M = jax.tree.leaves(params_m)[0].shape[0]
-        masked = _needs_masking(cl, H, M)
+        masked = _needs_masking(cl, H, M) or h_m is not None
+        bound = h_m if h_m is not None \
+            else (jnp.asarray(cl.local_steps, jnp.int32)
+                  if cl.local_steps is not None else None)
 
         def scan_body(carry, xs):
             params_m, mom_m, pstate, grads_c = carry
             if masked:
                 micro_m, ks, h_idx = xs
-                active = h_idx < jnp.asarray(cl.local_steps, jnp.int32)  # (M,)
+                active = h_idx < bound  # (M,)
             else:
                 micro_m, ks = xs  # (M, ...) microbatch slice, (M,) keys
             if global_d:
@@ -593,13 +657,16 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None):
     # "local" here = D advances inside the loop (global D updates at sync)
     local = cl.scaling == "local" and has_d
 
-    def run(params_m, mom_m, pstate, micro, keys):
+    def run(params_m, mom_m, pstate, micro, keys, h_m=None):
         if not (all_float32(params_m) and all_float32(mom_m)
                 and (not has_d or all_float32(pstate["d"]))):
-            return tree_run(params_m, mom_m, pstate, micro, keys)
+            return tree_run(params_m, mom_m, pstate, micro, keys, h_m=h_m)
         H = jax.tree.leaves(micro)[0].shape[0]
         M = jax.tree.leaves(params_m)[0].shape[0]
-        masked = _needs_masking(cl, H, M)
+        masked = _needs_masking(cl, H, M) or h_m is not None
+        bound = h_m if h_m is not None \
+            else (jnp.asarray(cl.local_steps, jnp.int32)
+                  if cl.local_steps is not None else None)
         flat_m, unflat_m, flat_d, unflat_d, fused_step = \
             _shard_flat_ops(shard_plan, local) if shard_plan is not None \
             else _local_flat_ops(params_m, local)
@@ -614,7 +681,7 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None):
         def scan_body(carry, xs):
             if masked:
                 micro_m, ks, h_idx = xs
-                active = h_idx < jnp.asarray(cl.local_steps, jnp.int32)
+                active = h_idx < bound
             else:
                 micro_m, ks = xs
             params_tree = unflat_m(carry["p"])
@@ -686,31 +753,58 @@ def _needs_masking(cl: ClientLoopSpec, H: int, M: int) -> bool:
 
 
 def _k_count(k: float, n: int) -> int:
-    """Static kept-entry count for a leaf of n elements (at least 1)."""
-    return max(1, min(n, int(round(k * n))))
+    """Static kept-entry count for a leaf of n elements (at least 1).
+
+    Half-up rounding: Python ``round`` banker's-rounds halves to even
+    (round(2.5) == 2), which made k = 0.5 on an odd-n leaf keep ⌊k·n⌋.
+    """
+    return max(1, min(n, int(math.floor(k * n + 0.5))))
 
 
-def _compress_leaf(spec: CompressionSpec, x, key):
+def _compress_leaf(spec: CompressionSpec, x, key, k_frac=None):
     """Apply one compression operator to a (M, ...) leaf of round deltas.
 
-    Per-client semantics throughout: topk/randk select k·n entries per client
-    row, int8-stochastic uses a per-client absmax/127 scale. Returns the
-    decoded (server-side) fp32 view of what crossed the wire, same shape as x.
+    Per-client semantics throughout: topk/randk select EXACTLY k·n entries
+    per client row, int8-stochastic uses a per-client absmax/127 scale.
+    Returns the decoded (server-side) fp32 view of what crossed the wire,
+    same shape as x.
+
+    ``k_frac`` (optional traced f32 scalar) overrides ``spec.k`` for
+    topk/randk with the controller's round-addressable kept fraction
+    (DESIGN.md §10): selection goes through stable ranks so the count is a
+    traced value and the program never recompiles as k moves. Both paths
+    break score ties toward the lower index, so a frozen ``k_frac`` equal to
+    a binary-exact ``spec.k`` selects the identical entry set bitwise.
     """
     M = x.shape[0]
     flat = x.reshape(M, -1)
     n = flat.shape[1]
     if spec.op in ("topk", "randk"):
-        kc = _k_count(spec.k, n)
         # randk = topk on uniform scores: same selection code, random ranking
         scores = jnp.abs(flat) if spec.op == "topk" \
             else jax.random.uniform(key, flat.shape)
-        thresh = jax.lax.top_k(scores, kc)[0][:, -1:]
-        kept = jnp.where(scores >= thresh, flat, 0.0)
+        if k_frac is None:
+            # exact-k: scatter the top_k index set. (Thresholding with
+            # `scores >= thresh` kept EVERY tied entry — k=0.5 on a
+            # 4-element all-equal row kept 4/4 — corrupting the wire
+            # accounting and randk's n/kc unbiased rescale.)
+            kc = _k_count(spec.k, n)
+            idx = jax.lax.top_k(scores, kc)[1]
+            mask = jnp.zeros(flat.shape, jnp.bool_).at[
+                jnp.arange(M)[:, None], idx].set(True)
+            inv = n / kc
+        else:
+            # traced count: entry kept iff its stable descending rank < kc
+            kc = jnp.clip(jnp.floor(k_frac * n + 0.5).astype(jnp.int32), 1, n)
+            order = jnp.argsort(-scores, axis=1)      # stable: ties low-first
+            ranks = jnp.argsort(order, axis=1)
+            mask = ranks < kc
+            inv = n / kc.astype(flat.dtype)
+        kept = jnp.where(mask, flat, 0.0)
         if spec.op == "randk" and not spec.error_feedback:
             # unbiased rescale E[C(x)] = x — only without EF: the dim/k
             # amplification is non-contractive and blows up the residual
-            kept = kept * (n / kc)
+            kept = kept * inv
         return kept.reshape(x.shape)
     # int8-stochastic: E[floor(v + U[0,1))] = v — unbiased QDQ
     absmax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
@@ -727,12 +821,13 @@ def _compress_leaf(spec: CompressionSpec, x, key):
     return dec.reshape(x.shape)
 
 
-def compress_tree(spec: CompressionSpec, deltas, key):
+def compress_tree(spec: CompressionSpec, deltas, key, k_frac=None):
     """Compress a pytree of (M, ...) round deltas; per-leaf folded keys."""
     leaves, treedef = jax.tree.flatten(deltas)
     keys = jax.random.split(jax.random.fold_in(key, 17), len(leaves))
     return jax.tree.unflatten(
-        treedef, [_compress_leaf(spec, x, k) for x, k in zip(leaves, keys)])
+        treedef,
+        [_compress_leaf(spec, x, k, k_frac) for x, k in zip(leaves, keys)])
 
 
 def measured_wire_bytes(comp: CompressionSpec, compressed,
@@ -794,9 +889,29 @@ def bytes_on_wire(spec: EngineSpec, params) -> dict:
                   and sy.average_momentum) else 0
     if mom and sy.sync_dtype:
         mom = mom // 4 * elem
-    return {"delta_bytes": delta, "momentum_bytes": mom,
-            "total_bytes": delta + mom, "uncompressed_bytes": raw + mom,
-            "compression_x": round((raw + mom) / max(delta + mom, 1), 2)}
+    out = {"delta_bytes": delta, "momentum_bytes": mom,
+           "total_bytes": delta + mom, "uncompressed_bytes": raw + mom,
+           "compression_x": round((raw + mom) / max(delta + mom, 1), 2)}
+    if spec.server.kind == "adaptive":
+        # the server m/v sync leg (replica agreement on the adaptive state,
+        # arXiv:2109.05109) — a server→server cost, reported separately and
+        # NOT folded into the client→server total_bytes above
+        sv = spec.server
+        elem_s = jnp.dtype(sv.sync_dtype).itemsize if sv.sync_dtype else 4
+        s_raw = s_comp = 0
+        for leaf in jax.tree.leaves(params):
+            n = 1
+            for s in leaf.shape:
+                n *= int(s)
+            s_raw += 2 * n * 4                  # fp32 m + v
+            if sv.sync_k < 1.0:
+                # shared top-|m| index set: (m, v) value pair + one index
+                s_comp += _k_count(sv.sync_k, n) * (2 * elem_s + 4)
+            else:
+                s_comp += 2 * n * elem_s
+        out["server_state_bytes"] = s_comp
+        out["server_state_uncompressed_bytes"] = s_raw
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -804,7 +919,7 @@ def bytes_on_wire(spec: EngineSpec, params) -> dict:
 # --------------------------------------------------------------------------- #
 
 
-def staleness_weights(spec: AsyncSpec, round_idx):
+def staleness_weights(spec: AsyncSpec, round_idx, b_eff=None):
     """Normalized weights over the delta FIFO's B slots (ages τ = 0..B−1).
 
     w_τ ∝ s(τ)·[round_idx ≥ τ]: slot τ holds the delta aggregated τ rounds
@@ -812,20 +927,28 @@ def staleness_weights(spec: AsyncSpec, round_idx):
     early rounds renormalize over the populated prefix. Weights always sum to
     1 (pinned in tests/test_heterogeneity.py); with B = 1 the single fresh
     slot gets weight 1 — plain delta averaging.
+
+    ``b_eff`` (optional traced i32 scalar in [1, B]) is the controller's
+    effective staleness depth (DESIGN.md §10): ages >= b_eff are masked to 0,
+    shrinking the applied window inside the statically allocated FIFO with no
+    recompile. ``None`` is the bit-exact static program.
     """
     B = spec.buffer_rounds
     ages = jnp.arange(B, dtype=jnp.float32)
     s = jnp.ones((B,)) if spec.weighting == "constant" \
         else (1.0 + ages) ** (-spec.poly_a)
     w = s * (ages <= round_idx)
+    if b_eff is not None:
+        w = w * (ages < b_eff)
     return w / jnp.maximum(w.sum(), jnp.finfo(jnp.float32).tiny)
 
 
 def participation_weights(spec: SyncSpec, key, n_clients: int):
     """Per-client sync weights: uniform 1/M, or 1/n_part on a sampled subset
-    (FedAvg-style client sampling); weights always sum to 1."""
+    (FedAvg-style client sampling); weights always sum to 1. Half-up count:
+    Python round() banker's-rounds (participation=0.5, M=5 sampled 2)."""
     M = n_clients
-    n_part = max(1, int(round(spec.participation * M)))
+    n_part = max(1, int(math.floor(spec.participation * M + 0.5)))
     if n_part < M:
         perm = jax.random.permutation(jax.random.fold_in(key, 3), M)
         return jnp.zeros((M,)).at[perm[:n_part]].set(1.0 / n_part)
@@ -875,6 +998,40 @@ def _broadcast_back(params_m, avg):
 # --------------------------------------------------------------------------- #
 
 
+def _compress_server_state(spec: ServerSpec, m, v):
+    """Compress the server m/v trees for the replica-agreement sync leg
+    (arXiv:2109.05109): the adaptive state every replica must share is kept
+    in its compressed form, so the per-round server-state traffic stops
+    scaling with the full fp32 trees (``bytes_on_wire``'s
+    ``server_state_bytes``). ``sync_k`` keeps ONE shared largest-|m| index
+    set per leaf for both trees — a dropped coordinate contributes no step
+    and its v falls back to the ``v_init`` floor, preserving the τ²
+    adaptivity floor semantics; ``sync_dtype`` QDQ-round-trips both trees
+    behind optimization barriers (same discipline as the sync average)."""
+    if spec.sync_k < 1.0:
+        v0 = spec.v_init if spec.v_init is not None else spec.tau ** 2
+
+        def mask_leaf(mm):
+            fm = mm.reshape(-1)
+            kc = _k_count(spec.sync_k, fm.size)
+            idx = jax.lax.top_k(jnp.abs(fm), kc)[1]
+            return jnp.zeros(fm.shape, jnp.bool_).at[idx].set(True) \
+                .reshape(mm.shape)
+
+        masks = jax.tree.map(mask_leaf, m)
+        m = jax.tree.map(lambda mm, ma: jnp.where(ma, mm, 0.0), m, masks)
+        v = jax.tree.map(
+            lambda vv, ma: jnp.where(ma, vv, jnp.asarray(v0, vv.dtype)),
+            v, masks)
+    if spec.sync_dtype:
+        sd = jnp.dtype(spec.sync_dtype)
+        qdq = lambda a: jax.lax.optimization_barrier(a.astype(sd)) \
+            .astype(a.dtype)
+        m = jax.tree.map(qdq, m)
+        v = jax.tree.map(qdq, v)
+    return m, v
+
+
 def _adaptive_server_update(spec: ServerSpec, server, x_prev, delta):
     """m/v/x update of Algorithm 2 [42] on the pseudo-gradient Δ."""
     m = jax.tree.map(lambda m_, d: spec.beta1 * m_ + (1 - spec.beta1) * d,
@@ -889,6 +1046,8 @@ def _adaptive_server_update(spec: ServerSpec, server, x_prev, delta):
         v = jax.tree.map(
             lambda v_, d: v_ - (1 - spec.beta2) * d * d
             * jnp.sign(v_ - d * d), server["v"], delta)
+    if not spec.sync_identity():
+        m, v = _compress_server_state(spec, m, v)
     x = jax.tree.map(
         lambda x_, m_, v_: x_ + spec.eta * m_ / (jnp.sqrt(v_) + spec.tau),
         x_prev, m, v)
@@ -916,20 +1075,68 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
     grad_fn = jax.value_and_grad(loss_fn)
     cl, sy, sv, pc = spec.client, spec.sync, spec.server, spec.precond
     _, client_run = _client_loop(loss_fn, grad_fn, spec, shard_plan)
+    ctrl = spec.controller
+    if ctrl.enabled:
+        # the controller owns the knobs it schedules — conflicting static
+        # settings are build-time errors, not silent overrides
+        if cl.local_steps is not None:
+            raise ValueError("controller and static local_steps are "
+                             "exclusive: the controller owns H_m")
+        if sy.participation < 1.0:
+            raise ValueError("controller requires full participation: its "
+                             "gradient-noise estimate needs every client's "
+                             "delta (and skipped stragglers are rescaled as "
+                             "the sampled subset)")
+        if ctrl.buffer_max > 0 and \
+                sy.asynchrony.buffer_rounds != ctrl.buffer_max:
+            raise ValueError(
+                f"controller buffer_max={ctrl.buffer_max} must equal the "
+                f"allocated AsyncSpec.buffer_rounds="
+                f"{sy.asynchrony.buffer_rounds} (b_eff masks within the "
+                f"static FIFO)")
 
     def round_step(state, batch, key):
         M = jax.tree.leaves(state["params"])[0].shape[0]
         H = jax.tree.leaves(batch)[0].shape[1]
+
+        # ---- Controller knobs for THIS round (DESIGN.md §10) ---------------
+        # read from state["ctrl"] — the compiled program is knob-agnostic
+        cstate = h_m_dyn = None
+        if ctrl.enabled:
+            if ctrl.h_max > H:
+                raise ValueError(f"controller h_max={ctrl.h_max} exceeds the "
+                                 f"round's H={H} microbatches")
+            cstate = state["ctrl"]
+            h_m_dyn = cstate["h_m"]
 
         # ---- ClientLoop: H local steps, vmap over M inside the scan --------
         keys = jax.random.split(key, (H, M))
         micro = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)  # (H,M,..)
         mom0 = jax.tree.map(jnp.zeros_like, state["mom"]) \
             if cl.reset_momentum else state["mom"]
-        params_m, mom_m, pstate, last_grads, losses = client_run(
-            state["params"], mom0, state["precond"], micro, keys)
+        if h_m_dyn is not None:
+            params_m, mom_m, pstate, last_grads, losses = client_run(
+                state["params"], mom0, state["precond"], micro, keys,
+                h_m=h_m_dyn)
+        else:
+            params_m, mom_m, pstate, last_grads, losses = client_run(
+                state["params"], mom0, state["precond"], micro, keys)
 
         drift_pre_sync = client_drift(params_m)
+
+        # ---- Controller observations: raw per-client delta statistics ------
+        ctrl_obs = None
+        if ctrl.enabled:
+            x_ref0 = jax.tree.map(lambda p: p[0], state["params"])
+            d_m = jax.tree.map(lambda p, x: p - x[None], params_m, x_ref0)
+            d2_pc = sum(jnp.sum(jnp.reshape(d * d, (M, -1)), axis=1)
+                        for d in jax.tree.leaves(d_m))           # (M,)
+            dbar_sq = sum(jnp.vdot(b, b).real for b in jax.tree.leaves(
+                jax.tree.map(lambda d: d.mean(axis=0), d_m)))
+            ctrl_obs = {"delta_sq_mean": d2_pc.mean(),
+                        "delta_sq_avg": dbar_sq,
+                        "payload_sq": jnp.float32(0.0),
+                        "resid_sq": jnp.float32(0.0)}
 
         # ---- SyncStrategy: the only cross-client traffic per round ---------
         avg = make_sync(sy, key, M)
@@ -950,17 +1157,36 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
             else:
                 if comp.error_feedback:
                     u_m = jax.tree.map(jnp.add, u_m, state["ef"])
-                c_m = compress_tree(comp, u_m, key)
+                k_dyn = cstate["k"] if (ctrl.enabled
+                                        and comp.op in ("topk", "randk")) \
+                    else None
+                c_m = compress_tree(comp, u_m, key, k_frac=k_dyn)
                 if comp.error_feedback:
                     new_ef = jax.tree.map(jnp.subtract, u_m, c_m)
                 comp_err = sum(jnp.vdot(u - c, u - c).real for u, c in zip(
                     jax.tree.leaves(u_m), jax.tree.leaves(c_m)))
+                if ctrl_obs is not None:
+                    # the compressor's actual input/residual energies feed
+                    # the controller's EF-residual-norm guard
+                    ctrl_obs["payload_sq"] = sum(
+                        jnp.vdot(u, u).real for u in jax.tree.leaves(u_m))
+                    ctrl_obs["resid_sq"] = comp_err
             delta_avg = jax.tree.map(avg, c_m)
+            if ctrl.enabled and ctrl.buffer_max > 0:
+                # controller-skipped stragglers (h_m = 0) contributed Δ = 0:
+                # rescale the mean to the reporting subset, exactly the
+                # 1/n_part weighting of FedAvg client sampling
+                n_act = jnp.maximum(
+                    jnp.sum((h_m_dyn > 0).astype(jnp.float32)), 1.0)
+                delta_avg = jax.tree.map(
+                    lambda d: d * (M / n_act).astype(d.dtype), delta_avg)
             if not asy.is_identity():
                 # FedBuff-style staleness buffer (DESIGN.md §5): enqueue the
                 # fresh aggregated delta, apply the staleness-weighted
                 # combination of the FIFO
-                w = staleness_weights(asy, state["round"])
+                b_eff = cstate["b_eff"] if (ctrl.enabled
+                                            and ctrl.buffer_max > 0) else None
+                w = staleness_weights(asy, state["round"], b_eff=b_eff)
                 new_buffer = jax.tree.map(
                     lambda b, d: jnp.concatenate(
                         [d[None].astype(b.dtype), b[:-1]], axis=0),
@@ -1007,15 +1233,18 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
                 stat = jax.tree.map(lambda s: s.mean(axis=0), stats)
             pstate = PC.update(pc, pstate, stat)
 
-        if _needs_masking(cl, H, M):
+        if h_m_dyn is not None or _needs_masking(cl, H, M):
             # heterogeneous H_m: steps past a client's budget froze its state;
             # average only the executed steps, and report each client's loss
-            # at ITS final step H_m−1, not the global step H−1
-            h_m = jnp.asarray(cl.local_steps, jnp.int32)
+            # at ITS final step H_m−1, not the global step H−1. (For a
+            # controller-skipped client, H_m = 0, its rows drop from the mean
+            # and the clamped index reports its frozen round-start loss.)
+            h_m = h_m_dyn if h_m_dyn is not None \
+                else jnp.asarray(cl.local_steps, jnp.int32)
             act = jnp.arange(H, dtype=jnp.int32)[:, None] < h_m[None, :]
-            loss_mean = jnp.sum(losses * act) / jnp.sum(act)
+            loss_mean = jnp.sum(losses * act) / jnp.maximum(jnp.sum(act), 1)
             loss_per_client = jnp.take_along_axis(
-                losses, (h_m - 1)[None, :], axis=0)[0]
+                losses, jnp.maximum(h_m - 1, 0)[None, :], axis=0)[0]
         else:
             loss_mean = losses.mean()
             loss_per_client = losses[-1]
@@ -1028,6 +1257,18 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
             metrics["compression_err"] = comp_err  # Σ‖u_m − C(u_m)‖²
         if staleness is not None:
             metrics["staleness"] = staleness  # E_w[τ] of the applied delta
+        if ctrl.enabled:
+            # realized knobs of THIS round + the raw observations, so a
+            # numpy replay (tests/_reference_controller.py) can reproduce
+            # the whole trajectory from logs alone
+            metrics["ctrl_h_m"] = h_m_dyn
+            metrics["ctrl_h_t"] = cstate["h_t"]
+            metrics["ctrl_k"] = cstate["k"]
+            metrics["ctrl_b_eff"] = cstate["b_eff"] if ctrl.buffer_max > 0 \
+                else jnp.int32(0)  # 0 = depth not managed by the controller
+            metrics["delta_sq_mean"] = ctrl_obs["delta_sq_mean"]
+            metrics["delta_sq_avg"] = ctrl_obs["delta_sq_avg"]
+            metrics["payload_sq"] = ctrl_obs["payload_sq"]
 
         # ---- ServerUpdate ---------------------------------------------------
         new_state = {"round": state["round"] + 1, "precond": pstate}
@@ -1035,6 +1276,12 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
             new_state["ef"] = new_ef
         if new_buffer is not None:
             new_state["buffer"] = new_buffer
+        if ctrl.enabled:
+            # roll the knobs forward for the NEXT round (pure, jit-traced;
+            # checkpointing the state pytree checkpoints the controller)
+            new_cstate, _ = CTRL.controller_step(ctrl, cstate, ctrl_obs)
+            new_state["ctrl"] = new_cstate
+            metrics["ctrl_gns_ema"] = new_cstate["gns_ema"]
         if sv.kind == "adaptive":
             x_prev = jax.tree.map(lambda p: p[0], state["params"])
             if delta_avg is not None:

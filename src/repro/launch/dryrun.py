@@ -37,7 +37,7 @@ from repro.utils.hlo_cost import xla_cost_properties
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "auto", method: str = "savic", compression=None,
             het_model=None, het_seed: int = 0, het_sigma: float = 0.6,
-            asynchrony=None, use_fused_kernel: bool = False,
+            asynchrony=None, controller=None, use_fused_kernel: bool = False,
             out_dir: str = "results/dryrun",
             save: bool = True, call=None, tag: str = "", verbose=True):
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -51,7 +51,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     built = build_step(arch, shape_name, mesh, mode=mode, method=method,
                        compression=compression, het_model=het_model,
                        het_seed=het_seed, het_sigma=het_sigma,
-                       asynchrony=asynchrony,
+                       asynchrony=asynchrony, controller=controller,
                        use_fused_kernel=use_fused_kernel, call=call) \
         if shape.kind == "train" else build_step(arch, shape_name, mesh,
                                                  call=call)
@@ -136,6 +136,24 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "sim_round_time_budgeted", "sim_round_time_async")
                if k in built.meta},
         }
+        if spec.controller.enabled:
+            # controller contract (DESIGN.md §10): the compiled program is
+            # knob-agnostic — H_m/k/b_eff are read from state["ctrl"] each
+            # round. The artifact records the spec and the INITIAL knobs;
+            # the realized trajectory lands in launch/train.py's log.
+            from repro.core import controller as _ctrl
+            c0 = _ctrl.init_ctrl_state(spec.controller,
+                                       built.meta.get("clients", 0))
+            rec["controller"] = {
+                "spec": _dc.asdict(spec.controller),
+                "init_knobs": {
+                    "h_m": [int(h) for h in c0["h_m"]],
+                    "k": float(c0["k"]),
+                    "b_eff": int(c0["b_eff"]),
+                },
+                "state_leaves": {k2: list(v.shape)
+                                 for k2, v in c0.items()},
+            }
     if verbose:
         print(f"[dryrun] {arch:18s} {shape_name:12s} mesh={rec['mesh']:8s} "
               f"mode={rec['mode']:6s} flops={rec['flops']:.3e} "
@@ -177,6 +195,10 @@ def main():
                     help="server staleness buffer depth B (adds the sharded "
                          "delta FIFO to the compiled state)")
     ap.add_argument("--staleness-weight", default="constant")
+    ap.add_argument("--controller", action="store_true",
+                    help="enable the adaptive communication-budget controller "
+                         "(round-addressable H_m/k/b_eff knobs; artifact "
+                         "records the spec + initial knob values)")
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="flat-buffer fused client loop (one Pallas pass per "
                          "local step; artifact records the flat-view layout)")
@@ -190,6 +212,11 @@ def main():
     asy = None if not args.async_buffer else AsyncSpec(
         buffer_rounds=args.async_buffer, weighting=args.staleness_weight)
     het = args.het_model or None
+    ctrl = None
+    if args.controller:
+        from repro.core.controller import ControllerSpec
+        ctrl = ControllerSpec(enabled=True, buffer_max=args.async_buffer)
+        het = het or "lognormal"  # controller requires a heterogeneity trace
 
     if args.all:
         failures = []
@@ -198,7 +225,7 @@ def main():
                 run_one(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
                         method=args.method, compression=comp, het_model=het,
                         het_seed=args.het_seed, het_sigma=args.het_sigma,
-                        asynchrony=asy,
+                        asynchrony=asy, controller=ctrl,
                         use_fused_kernel=args.use_fused_kernel,
                         out_dir=args.out, tag=args.tag)
             except Exception as e:  # noqa
@@ -213,7 +240,7 @@ def main():
     run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
             method=args.method, compression=comp, het_model=het,
             het_seed=args.het_seed, het_sigma=args.het_sigma, asynchrony=asy,
-            use_fused_kernel=args.use_fused_kernel,
+            controller=ctrl, use_fused_kernel=args.use_fused_kernel,
             out_dir=args.out, tag=args.tag)
 
 

@@ -75,6 +75,7 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                      het_sigma: float = 0.6,
                      local_steps: Optional[tuple] = None,
                      asynchrony: Optional[engine.AsyncSpec] = None,
+                     controller: Optional[engine.ControllerSpec] = None,
                      use_fused_kernel: bool = False, seed: int = 0):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
@@ -129,6 +130,19 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
             het_meta["sim_round_time_async"] = round(fed.simulated_round_time(
                 step_times, local_steps, barrier="async",
                 buffer_rounds=asy.buffer_rounds), 4)
+        if controller is not None and controller.enabled \
+                and not controller.step_times:
+            # the sampled trace IS the controller's observed straggler
+            # spread; H_m then comes from the controller, not a static bake
+            controller = dataclasses.replace(
+                controller,
+                step_times=tuple(float(t) for t in step_times))
+    if controller is not None and controller.enabled:
+        # the controller owns H_m (round-addressable via masking); a static
+        # local_steps bake would conflict (build_round_step raises on both)
+        local_steps = None
+        spec = dataclasses.replace(spec, controller=controller)
+        het_meta["controller"] = dataclasses.asdict(controller)
     if local_steps is not None:
         spec = dataclasses.replace(
             spec, client=dataclasses.replace(spec.client,
@@ -202,6 +216,9 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
     metrics_shape = jax.eval_shape(step, state_shape, batch_shape)[1]
     metrics_spec = jax.tree.map(lambda _: P(), metrics_shape)
     metrics_spec["loss_per_client"] = P(plan.client if plan.client else None)
+    if "ctrl_h_m" in metrics_shape:
+        # realized per-client H_m: client-sharded like loss_per_client
+        metrics_spec["ctrl_h_m"] = P(plan.client if plan.client else None)
 
     ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                                 is_leaf=lambda x: isinstance(x, P))
@@ -266,6 +283,13 @@ def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):
         state_spec["buffer"] = jax.tree.map(
             lambda s: P(None, *s), pspec_buf,
             is_leaf=lambda x: isinstance(x, P))
+    if "ctrl" in state_shape:
+        # controller knobs/EMAs (DESIGN.md §10): scalars replicated; the (M,)
+        # h_m vector rides the client axes like the per-client precond t
+        cl_ax = plan.client if plan.client else None
+        state_spec["ctrl"] = {
+            k: (P(cl_ax) if s.ndim else P())
+            for k, s in state_shape["ctrl"].items()}
     return state_spec
 
 

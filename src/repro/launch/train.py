@@ -114,6 +114,23 @@ def _parser():
     ap.add_argument("--staleness-weight", default="constant",
                     choices=list(engine.STALENESS_WEIGHTINGS),
                     help="staleness weighting s(tau) for the delta FIFO")
+    ap.add_argument("--controller", action="store_true",
+                    help="adaptive communication-budget controller "
+                         "(DESIGN.md §10): gradient-noise-driven H_m growth, "
+                         "EF-residual-guarded compression k, straggler-"
+                         "spread-selected buffer depth. Owns H_m (the "
+                         "--het-model trace feeds its step_times); state "
+                         "rides the checkpoint bitwise")
+    ap.add_argument("--ctrl-h-min", type=int, default=1,
+                    help="controller: initial global local-step budget H_t")
+    ap.add_argument("--ctrl-noise-target", type=float, default=1.0,
+                    help="controller: grow H_t while the gradient-noise EMA "
+                         "exceeds this")
+    ap.add_argument("--ctrl-k-min", type=float, default=0.05,
+                    help="controller: floor of the compression-k schedule")
+    ap.add_argument("--ctrl-resid-guard", type=float, default=0.5,
+                    help="controller: EF-residual-norm ratio above which k "
+                         "grows back toward 1")
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="flat-buffer fused client loop: one Pallas pass per "
                          "local step, every preconditioner kind (DESIGN.md "
@@ -149,7 +166,17 @@ def _resolve_spec(args, n_clients):
     local_steps = None
     step_times = federated.sample_step_times(
         args.het_model, n_clients, seed=args.het_seed, sigma=args.het_sigma)
-    if args.het_model != "uniform":
+    ctrl = None
+    if args.controller:
+        # the controller owns H_m — no static local_steps bake; the sampled
+        # straggler trace is its observed spread (DESIGN.md §10)
+        ctrl = engine.ControllerSpec(
+            enabled=True, h_min=args.ctrl_h_min, h_max=args.h_local,
+            noise_target=args.ctrl_noise_target, k_min=args.ctrl_k_min,
+            resid_guard=args.ctrl_resid_guard,
+            buffer_max=args.async_buffer,
+            step_times=tuple(float(t) for t in step_times))
+    elif args.het_model != "uniform":
         local_steps = tuple(int(h) for h in federated.local_steps_from_times(
             step_times, args.h_local))
     if args.method == "savic":
@@ -171,6 +198,9 @@ def _resolve_spec(args, n_clients):
             sync_dtype=args.sync_dtype, compression=comp,
             local_steps=local_steps, asynchrony=asy,
             use_fused_kernel=args.use_fused_kernel)
+    if ctrl is not None:
+        import dataclasses as _dc
+        spec = _dc.replace(spec, controller=ctrl)
     return spec, local_steps, step_times
 
 
@@ -269,7 +299,24 @@ def main(argv=None):
                 rec["compression_err"] = float(metrics["compression_err"])
             if "staleness" in metrics:
                 rec["staleness"] = float(metrics["staleness"])
-            rec["sim_time"] = round((r + 1) * sim_t, 4)  # simulated wall clock
+            if "ctrl_h_m" in metrics:
+                # realized knob trajectory (DESIGN.md §10). Per-round
+                # sim_round_time (not a cumulative) so a resumed run logs
+                # bitwise-identical rounds; consumers sum it themselves.
+                h_real = [int(h) for h in np.asarray(metrics["ctrl_h_m"])]
+                b_real = int(metrics["ctrl_b_eff"])
+                rec["ctrl_h_m"] = h_real
+                rec["ctrl_h_t"] = int(metrics["ctrl_h_t"])
+                rec["ctrl_k"] = round(float(metrics["ctrl_k"]), 6)
+                rec["ctrl_b_eff"] = b_real
+                rec["ctrl_gns_ema"] = round(float(metrics["ctrl_gns_ema"]), 6)
+                extra += f" H_t {rec['ctrl_h_t']}"
+                rec["sim_round_time"] = round(federated.simulated_round_time(
+                    step_times, h_real,
+                    barrier="async" if args.async_buffer else "sync",
+                    buffer_rounds=b_real or args.async_buffer), 4)
+            else:
+                rec["sim_time"] = round((r + 1) * sim_t, 4)  # simulated clock
             # measurements — the only non-deterministic log fields (§9)
             rec["wall_s"] = round(wall, 4)
             rec["tokens_per_s"] = round(tokens_round / wall, 1)

@@ -1,0 +1,122 @@
+"""Numpy oracle for core/controller.py (DESIGN.md §10).
+
+Replays ``init_ctrl_state``/``controller_step`` step-for-step so an engine
+run's knob trajectory can be reproduced from its logged per-round
+observations alone (tests/test_controller.py pins this). The replay
+contract:
+
+  * every INTEGER knob — t, H_t, H_m, b_eff — replays BITWISE: the
+    controller routes them through exact python-int lookup tables
+    (``budget_table``/``growth_table``), so float32 rounding never reaches a
+    floor();
+  * ``k`` replays bitwise too (single float32 multiplies, no add chains);
+  * the float EMAs (gns_ema, resid_ema) replay to within 1 ulp: LLVM may
+    contract the traced mul+add into an FMA (single rounding) that separate
+    numpy ops cannot reproduce. A 1-ulp EMA difference can flip a threshold
+    comparison only when the EMA lands exactly on noise_target/resid_guard —
+    measure-zero, and deterministic for fixed test data.
+
+Keep in lockstep with src/repro/core/controller.py; do not import jax here
+(the whole point is an independent implementation).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_TINY = np.float32(1e-12)
+
+
+def half_up(x: float) -> int:
+    return int(math.floor(x + 0.5))
+
+
+def buffer_depth(spec) -> int:
+    if spec.buffer_max <= 0:
+        return 1
+    spread = (max(spec.step_times) / min(spec.step_times)
+              if spec.step_times else 1.0)
+    return max(1, min(spec.buffer_max, half_up(spread / spec.spread_per_slot)))
+
+
+def budget_table(spec, n_clients: int) -> tuple:
+    ts = spec.step_times or (1.0,) * n_clients
+    assert len(ts) == n_clients
+    lo = 0 if spec.buffer_max > 0 else 1
+    tmin = min(ts)
+    return tuple(
+        tuple(max(lo, min(h, int(math.floor(h * tmin / t + 1e-6))))
+              for t in ts)
+        for h in range(spec.h_max + 1))
+
+
+def growth_table(spec) -> tuple:
+    return tuple(
+        min(spec.h_max, max(h + 1, half_up(h * spec.h_growth)))
+        for h in range(spec.h_max + 1))
+
+
+def budget_h(spec, h_t, n_clients: int) -> np.ndarray:
+    return np.asarray(budget_table(spec, n_clients)[int(h_t)], np.int32)
+
+
+def init_ctrl_state(spec, n_clients: int) -> dict:
+    return {
+        "t": np.int32(0),
+        "gns_ema": np.float32(0.0),
+        "resid_ema": np.float32(0.0),
+        "h_t": np.int32(spec.h_min),
+        "h_m": budget_h(spec, spec.h_min, n_clients),
+        "k": np.float32(spec.k_max),
+        "b_eff": np.int32(buffer_depth(spec)),
+    }
+
+
+def _ema_update(ema: float, old: np.float32, new: np.float32) -> np.float32:
+    return np.float32(np.float32(ema) * old + np.float32(1.0 - ema) * new)
+
+
+def controller_step(spec, ctrl_state: dict, obs: dict):
+    M = ctrl_state["h_m"].shape[0]
+    first = int(ctrl_state["t"]) == 0
+
+    # -- gradient-noise scale -> monotone H_t growth ------------------------
+    d2m = np.float32(obs["delta_sq_mean"])
+    d2a = np.float32(obs["delta_sq_avg"])
+    gns = np.maximum(d2m - d2a, np.float32(0.0)) / np.maximum(d2a, _TINY)
+    gns_ema = gns if first else _ema_update(spec.ema,
+                                            np.float32(ctrl_state["gns_ema"]),
+                                            gns)
+    h_t = int(ctrl_state["h_t"])
+    if gns_ema > np.float32(spec.noise_target):
+        h_t = growth_table(spec)[h_t]
+    h_m = budget_h(spec, h_t, M)
+
+    # -- EF-residual-norm guard -> compression-k schedule -------------------
+    payload = np.float32(obs["payload_sq"])
+    resid = np.float32(obs["resid_sq"])
+    ratio = np.sqrt(resid / np.maximum(payload, _TINY))
+    resid_ema = np.float32(ctrl_state["resid_ema"])
+    k = np.float32(ctrl_state["k"])
+    if payload > 0.0:
+        resid_ema = ratio if first else _ema_update(spec.ema, resid_ema,
+                                                    ratio)
+        if resid_ema > np.float32(spec.resid_guard):
+            k = np.minimum(np.float32(k * np.float32(spec.k_growth)),
+                           np.float32(spec.k_max))
+        else:
+            k = np.maximum(np.float32(k * np.float32(spec.k_shrink)),
+                           np.float32(spec.k_min))
+
+    new_state = {
+        "t": np.int32(ctrl_state["t"] + 1),
+        "gns_ema": np.float32(gns_ema),
+        "resid_ema": np.float32(resid_ema),
+        "h_t": np.int32(h_t),
+        "h_m": h_m,
+        "k": np.float32(k),
+        "b_eff": np.int32(buffer_depth(spec)),
+    }
+    knobs = {"h_m": h_m, "k": new_state["k"], "b_eff": new_state["b_eff"]}
+    return new_state, knobs

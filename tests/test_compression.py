@@ -300,9 +300,57 @@ def test_topk_ef_residual_identity():
                              {"x": x}, jax.random.PRNGKey(8))["x"]
     residual = x - c
     np.testing.assert_array_equal(np.asarray(c + residual), np.asarray(x))
-    # and each client kept ~k·n entries (ties may keep a few more)
+    # every client keeps EXACTLY k_count entries — no tie over-keeping
     kept = (np.asarray(c) != 0).sum(axis=1)
-    assert (kept >= 1).all() and (kept <= 0.2 * 97).all()
+    np.testing.assert_array_equal(kept, np.full((4,), engine._k_count(0.1,
+                                                                      97)))
+    assert engine._k_count(0.1, 97) == 10
+
+
+def test_topk_exact_k_under_ties():
+    """Tied scores used to over-keep (a >= threshold mask kept every tied
+    entry); the scatter of lax.top_k indices keeps EXACTLY k_count, breaking
+    ties low-index-first, and the measured payload equals the analytic
+    accounting."""
+    x = jnp.asarray([[1.0, 1.0, 1.0, 1.0],
+                     [2.0, -2.0, 2.0, -2.0],
+                     [0.0, 0.0, 0.0, 0.0]])      # all-zero row: still exact-k
+    comp = engine.CompressionSpec(op="topk", k=0.5)
+    c = np.asarray(engine.compress_tree(comp, {"x": x},
+                                        jax.random.PRNGKey(0))["x"])
+    kc = engine._k_count(0.5, 4)
+    assert kc == 2
+    # exactly kc survivors per client, lowest indices among the ties
+    np.testing.assert_array_equal(c[0], [1.0, 1.0, 0.0, 0.0])
+    np.testing.assert_array_equal(c[1], [2.0, -2.0, 0.0, 0.0])
+    np.testing.assert_array_equal((c != 0).sum(axis=1), [kc, kc, 0])
+    # measured wire bytes == analytic bytes_on_wire (ties included)
+    measured = engine.measured_wire_bytes(comp, {"x": jnp.asarray(c)})
+    analytic = engine.bytes_on_wire(
+        engine.method_spec("fedavg", compression=comp),
+        {"x": jax.ShapeDtypeStruct((4,), jnp.float32)})["delta_bytes"]
+    assert analytic == kc * (4 + 4) == 16
+    # rows 0/1 moved exactly the analytic payload; the zero row moved less
+    np.testing.assert_array_equal(measured[:2], [analytic, analytic])
+
+
+def test_k_count_and_participation_round_half_up():
+    """Both code paths round half-integers UP (floor(x + 0.5)); python
+    round()'s banker's rounding sent k=0.5 of a 5-element leaf to 2 kept
+    entries and participation=0.5 of M=5 to 2 sampled clients."""
+    assert engine._k_count(0.5, 5) == 3          # round(2.5) would give 2
+    assert engine._k_count(0.3, 5) == 2          # floor(1.5 + 0.5)
+    assert engine._k_count(0.1, 1000) == 100     # unchanged on exact cases
+    assert engine._k_count(0.25, 30) == 8        # floor(7.5 + 0.5)
+    c = engine.compress_tree(engine.CompressionSpec(op="topk", k=0.5),
+                             {"x": jnp.arange(1.0, 6.0)[None]},
+                             jax.random.PRNGKey(0))["x"]
+    assert int((np.asarray(c) != 0).sum()) == 3
+    w = np.asarray(engine.participation_weights(
+        engine.SyncSpec(participation=0.5), jax.random.PRNGKey(2), 5))
+    assert (w > 0).sum() == 3                    # round(2.5) would give 2
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(w[w > 0], 1.0 / 3.0, rtol=1e-6)
 
 
 def test_participation_weights_sum_to_one_under_compression():
@@ -411,6 +459,27 @@ def test_bytes_on_wire_matches_measured_payload():
         engine.measured_wire_bytes(engine.CompressionSpec(), tree,
                                    elem_bytes=2),
         np.full((M,), (157 + 30) * 2))
+
+
+@given(st.sampled_from(["topk", "randk", "int8-stochastic"]),
+       st.floats(min_value=0.01, max_value=1.0),
+       st.integers(min_value=1, max_value=60),
+       st.integers(min_value=0, max_value=1000))
+@settings(max_examples=40, deadline=None)
+def test_measured_equals_analytic_wire_bytes_property(op, k, n, seed):
+    """measured_wire_bytes == bytes_on_wire's analytic per-client payload for
+    every (operator × k × leaf shape): continuous deltas keep exactly
+    _k_count entries, so the two accountings agree to the byte."""
+    M = 3
+    x = jax.random.normal(jax.random.PRNGKey(seed), (M, n))
+    comp = engine.CompressionSpec(op=op, k=k)
+    c = engine.compress_tree(comp, {"x": x}, jax.random.PRNGKey(seed + 1))
+    measured = engine.measured_wire_bytes(comp, c)
+    analytic = engine.bytes_on_wire(
+        engine.method_spec("fedavg", compression=comp),
+        {"x": jax.ShapeDtypeStruct((n,), jnp.float32)})["delta_bytes"]
+    np.testing.assert_array_equal(measured, np.full((M,), analytic),
+                                  err_msg=f"{op} k={k} n={n}")
 
 
 def test_bytes_on_wire_accounting():

@@ -1,0 +1,507 @@
+"""Adaptive communication-budget controller — the differential harness.
+
+Locks down core/controller.py + its engine threading (DESIGN.md §10):
+  * identity contract: the disabled default ``ControllerSpec()`` emits the
+    BIT-EXACT pre-controller program (vs tests/_reference_engine.py) for all
+    six METHODS, and adds no state leaf / no metric;
+  * ``controller_step`` replays bitwise against the numpy float32 oracle
+    (tests/_reference_controller.py) over long random observation streams;
+  * engine integration: a full adaptive run's knob trajectory is reproduced
+    by the oracle FROM THE LOGGED METRICS ALONE — the logs are a complete
+    replay record;
+  * a frozen controller (h_min = h_max, k_min = k_max, no buffer) is
+    bitwise-identical to the equivalent static spec: knob plumbing through
+    masking adds no arithmetic;
+  * checkpoint round-trip: the ``ctrl`` leaf rides the state pytree bitwise;
+  * server m/v compression (ServerSpec.sync_dtype/sync_k): identity default,
+    top-|m| shared-mask semantics with the v_init floor, wire accounting;
+  * spec/build validation and the straggler-skip budget rule.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import _reference_controller as ref_ctrl
+import _reference_engine as ref_engine
+from repro.checkpoint import restore, save
+from repro.core import controller as CTRL
+from repro.core import engine
+from repro.data import QuadraticLoader, QuadraticProblem
+from repro.utils.tree import tree_paths
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return QuadraticProblem.make(d=24, M=4, mu=0.5, L=5.0, sigma=0.3, seed=0)
+
+
+def _quad_loss(problem):
+    Q = jnp.asarray(problem.Q, jnp.float32)
+    b = jnp.asarray(problem.b, jnp.float32)
+
+    def loss(params, micro):
+        x = params["x"]
+        return 0.5 * (x - b[0]) @ Q[0] @ (x - b[0]) + micro["z"] @ x
+
+    return loss
+
+
+def _run(problem, spec, rounds=4, H=3, seed=0, n_clients=4, collect=False):
+    loss = _quad_loss(problem)
+    step = jax.jit(engine.build_round_step(loss, spec))
+    state = engine.init_state(jax.random.PRNGKey(0),
+                              lambda k: {"x": jnp.zeros(24)}, spec, n_clients)
+    loader = QuadraticLoader(problem, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    mets = []
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        state, met = step(state, jax.tree.map(jnp.asarray,
+                                              loader.round_batch(H)), k)
+        if collect:
+            mets.append(jax.tree.map(np.asarray, met))
+    return (state, mets) if collect else (state, met)
+
+
+MS_KW = dict(gamma=0.01, alpha=1e-2, eta_l=0.01, eta=0.05)
+
+
+# --------------------------------------------------------------------------- #
+# identity: disabled controller == pre-controller engine, bitwise, 6 methods
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("method", engine.METHODS)
+def test_disabled_controller_bit_identical_to_prepr_engine(problem, method):
+    """``ControllerSpec()`` (the default, disabled) changes NOTHING: state and
+    metrics agree bitwise with the verbatim pre-controller engine snapshot."""
+    spec_new = engine.method_spec(method, **MS_KW,
+                                  controller=engine.ControllerSpec())
+    assert not spec_new.controller.enabled
+    spec_ref = ref_engine.method_spec(method, **MS_KW)
+
+    loss = _quad_loss(problem)
+    st_new = engine.init_state(jax.random.PRNGKey(0),
+                               lambda k: {"x": jnp.zeros(24)}, spec_new, 4)
+    st_ref = ref_engine.init_state(jax.random.PRNGKey(0),
+                                   lambda k: {"x": jnp.zeros(24)}, spec_ref, 4)
+    assert "ctrl" not in st_new
+    step_new = jax.jit(engine.build_round_step(loss, spec_new))
+    step_ref = jax.jit(ref_engine.build_round_step(loss, spec_ref))
+    loader_a, loader_b = (QuadraticLoader(problem, seed=0) for _ in range(2))
+    key = jax.random.PRNGKey(1)
+    for _ in range(4):
+        key, k = jax.random.split(key)
+        ba = jax.tree.map(jnp.asarray, loader_a.round_batch(3))
+        bb = jax.tree.map(jnp.asarray, loader_b.round_batch(3))
+        st_new, met_new = step_new(st_new, ba, k)
+        st_ref, met_ref = step_ref(st_ref, bb, k)
+    got = dict(tree_paths(st_new))
+    for p, leaf in tree_paths(st_ref):
+        np.testing.assert_array_equal(np.asarray(got[p]), np.asarray(leaf),
+                                      err_msg=p)
+    assert float(met_new["loss"]) == float(met_ref["loss"])
+    assert "ctrl_h_m" not in met_new
+
+
+# --------------------------------------------------------------------------- #
+# controller_step == numpy oracle, bitwise
+# --------------------------------------------------------------------------- #
+
+
+def _assert_ctrl_state_matches(jstate, nstate, msg=""):
+    """Integer knobs + k bitwise; EMA floats to 1 ulp (LLVM FMA contraction
+    of the traced mul+add — see _reference_controller's module docstring)."""
+    want = dict(tree_paths(nstate))
+    for p, leaf in tree_paths(jstate):
+        if "ema" in p:
+            np.testing.assert_allclose(np.asarray(leaf), want[p], rtol=3e-7,
+                                       err_msg=f"{msg} leaf {p}")
+        else:
+            np.testing.assert_array_equal(np.asarray(leaf), want[p],
+                                          err_msg=f"{msg} leaf {p}")
+
+
+CTRL_SPECS = [
+    CTRL.ControllerSpec(enabled=True, h_min=1, h_max=6, noise_target=0.5,
+                        k_min=0.1, resid_guard=0.4,
+                        step_times=(1.0, 1.3, 2.0, 2.6)),
+    CTRL.ControllerSpec(enabled=True, h_min=2, h_max=8, noise_target=2.0,
+                        h_growth=2.0, ema=0.5, k_min=0.25, k_max=0.5,
+                        k_shrink=0.5, k_growth=2.0, buffer_max=3,
+                        spread_per_slot=0.8, step_times=(1.0, 1.7, 3.4, 4.2)),
+    CTRL.ControllerSpec(enabled=True, h_min=1, h_max=4),  # homogeneous
+]
+
+
+@pytest.mark.parametrize("si", range(len(CTRL_SPECS)))
+def test_controller_step_matches_numpy_oracle(si):
+    """40 steps of random observations: jit-traced controller_step and the
+    numpy oracle agree — integer knobs and k bitwise, EMAs to 1 ulp."""
+    spec = CTRL_SPECS[si]
+    M = len(spec.step_times) or 4
+    rng = np.random.default_rng(si)
+    jstate = CTRL.init_ctrl_state(spec, M)
+    nstate = ref_ctrl.init_ctrl_state(spec, M)
+    _assert_ctrl_state_matches(jstate, nstate, "init")
+    step = jax.jit(lambda s, o: CTRL.controller_step(spec, s, o))
+    for t in range(40):
+        d2a = np.float32(rng.uniform(1e-4, 2.0))
+        payload = np.float32(rng.uniform(0.0, 3.0)) \
+            if rng.random() > 0.2 else np.float32(0.0)
+        obs = {"delta_sq_mean": np.float32(d2a * rng.uniform(0.5, 4.0)),
+               "delta_sq_avg": d2a,
+               "payload_sq": payload,
+               "resid_sq": np.float32(payload * rng.uniform(0.0, 0.9))}
+        jstate, jknobs = step(jstate, {k: jnp.asarray(v)
+                                       for k, v in obs.items()})
+        nstate, nknobs = ref_ctrl.controller_step(spec, nstate, obs)
+        _assert_ctrl_state_matches(jstate, nstate, f"step {t}")
+        for kk in jknobs:
+            np.testing.assert_array_equal(np.asarray(jknobs[kk]), nknobs[kk],
+                                          err_msg=f"step {t} knob {kk}")
+
+
+# --------------------------------------------------------------------------- #
+# engine integration: the logged metrics are a complete replay record
+# --------------------------------------------------------------------------- #
+
+
+def test_engine_trajectory_replayed_by_oracle_from_logs(problem):
+    """Run a full adaptive round loop (GNS-driven H_t growth + EF-guarded k
+    schedule) and reproduce the ENTIRE knob trajectory with the numpy oracle
+    using only what the engine logged per round."""
+    ctrl = CTRL.ControllerSpec(enabled=True, h_min=1, h_max=5,
+                               noise_target=1e-3, resid_guard=0.3,
+                               k_min=0.1, k_max=1.0,
+                               step_times=(1.0, 1.3, 2.0, 2.6))
+    spec = engine.method_spec(
+        "fedadam", **MS_KW,
+        compression=engine.CompressionSpec(op="topk", k=0.5,
+                                           error_feedback=True),
+        controller=ctrl)
+    state, mets = _run(problem, spec, rounds=10, H=6, collect=True)
+
+    s = ref_ctrl.init_ctrl_state(ctrl, 4)
+    grew = False
+    for r, met in enumerate(mets):
+        # the metrics report THIS round's realized knobs = state before update
+        np.testing.assert_array_equal(met["ctrl_h_m"], s["h_m"],
+                                      err_msg=f"round {r} h_m")
+        assert int(met["ctrl_h_t"]) == int(s["h_t"]), r
+        np.testing.assert_array_equal(met["ctrl_k"], s["k"], err_msg=str(r))
+        assert int(met["ctrl_b_eff"]) == 0  # depth unmanaged (buffer_max=0)
+        obs = {"delta_sq_mean": met["delta_sq_mean"],
+               "delta_sq_avg": met["delta_sq_avg"],
+               "payload_sq": met["payload_sq"],
+               "resid_sq": met["compression_err"]}
+        s, _ = ref_ctrl.controller_step(ctrl, s, obs)
+        np.testing.assert_allclose(met["ctrl_gns_ema"], s["gns_ema"],
+                                   rtol=3e-7, err_msg=f"round {r} gns_ema")
+        grew = grew or int(s["h_t"]) > ctrl.h_min
+    # the schedule actually moved (otherwise this test pins nothing)
+    assert grew, "H_t never grew — raise rounds or lower noise_target"
+    assert int(mets[-1]["ctrl_h_t"]) > ctrl.h_min
+    # realized H_m always obeys the budget rule for its round's H_t
+    for met in mets:
+        np.testing.assert_array_equal(
+            met["ctrl_h_m"],
+            ref_ctrl.budget_h(ctrl, int(met["ctrl_h_t"]), 4))
+
+
+def test_straggler_skip_with_buffer(problem):
+    """With a staleness buffer the budget rule drops its >=1 floor: at
+    H_t = 1 the slow clients sit out (H_m = 0), the applied delta is rescaled
+    to the active subset, and the loss stays finite."""
+    ctrl = CTRL.ControllerSpec(enabled=True, h_min=1, h_max=4,
+                               noise_target=0.05, buffer_max=3,
+                               step_times=(1.0, 1.3, 2.0, 2.6))
+    spec = engine.method_spec(
+        "fedavg", eta_l=0.01,
+        compression=engine.CompressionSpec(op="topk", k=0.5,
+                                           error_feedback=True),
+        asynchrony=engine.AsyncSpec(buffer_rounds=3), controller=ctrl)
+    state, mets = _run(problem, spec, rounds=6, H=4, collect=True)
+    h0 = mets[0]["ctrl_h_m"]
+    np.testing.assert_array_equal(h0, [1, 0, 0, 0])   # budget 1.0·min(t)
+    assert int(mets[0]["ctrl_b_eff"]) == 3            # half_up(2.6/1.0)
+    assert all(np.isfinite(float(m["loss"])) for m in mets)
+    assert np.isfinite(np.asarray(state["params"]["x"])).all()
+    # replay holds under the buffered/skipping configuration too
+    s = ref_ctrl.init_ctrl_state(ctrl, 4)
+    for r, met in enumerate(mets):
+        np.testing.assert_array_equal(met["ctrl_h_m"], s["h_m"],
+                                      err_msg=f"round {r}")
+        s, _ = ref_ctrl.controller_step(
+            ctrl, s, {"delta_sq_mean": met["delta_sq_mean"],
+                      "delta_sq_avg": met["delta_sq_avg"],
+                      "payload_sq": met["payload_sq"],
+                      "resid_sq": met["compression_err"]})
+
+
+# --------------------------------------------------------------------------- #
+# frozen controller == static spec, bitwise (knob plumbing adds no arithmetic)
+# --------------------------------------------------------------------------- #
+
+
+def test_frozen_controller_bit_identical_to_static_spec(problem):
+    """h_min = h_max and k_min = k_max freeze every knob at its static value;
+    the dynamic masking/compression path must then be BITWISE the static
+    program (binary-exact k so f32 k·n == double k·n)."""
+    comp = engine.CompressionSpec(op="topk", k=0.25, error_feedback=True)
+    ctrl = CTRL.ControllerSpec(enabled=True, h_min=3, h_max=3,
+                               k_min=0.25, k_max=0.25)
+    spec_dyn = engine.method_spec("savic", **MS_KW, compression=comp,
+                                  controller=ctrl)
+    spec_sta = engine.method_spec("savic", **MS_KW, compression=comp)
+    st_d, _ = _run(problem, spec_dyn, rounds=4, H=3)
+    st_s, _ = _run(problem, spec_sta, rounds=4, H=3)
+    for grp in ("params", "mom", "ef"):
+        np.testing.assert_array_equal(np.asarray(st_d[grp]["x"]),
+                                      np.asarray(st_s[grp]["x"]), err_msg=grp)
+    # the frozen knobs really were the static values all along
+    np.testing.assert_array_equal(np.asarray(st_d["ctrl"]["h_m"]),
+                                  np.full((4,), 3, np.int32))
+    assert float(st_d["ctrl"]["k"]) == 0.25
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint: the ctrl leaf rides the state pytree bitwise
+# --------------------------------------------------------------------------- #
+
+
+def test_ctrl_state_checkpoint_roundtrip(tmp_path, problem):
+    ctrl = CTRL.ControllerSpec(enabled=True, h_min=1, h_max=4,
+                               noise_target=0.05, resid_guard=0.3,
+                               step_times=(1.0, 1.5, 2.0, 2.5))
+    spec = engine.method_spec(
+        "fedadam", **MS_KW,
+        compression=engine.CompressionSpec(op="topk", k=0.5,
+                                           error_feedback=True),
+        controller=ctrl)
+    state, _ = _run(problem, spec, rounds=3, H=4)
+    assert "ctrl" in state and int(state["ctrl"]["t"]) == 3
+    save(str(tmp_path), 3, state)
+    out, step = restore(str(tmp_path), jax.tree.map(jnp.zeros_like, state))
+    assert step == 3
+    got = dict(tree_paths(out))
+    for p, leaf in tree_paths(state):
+        assert got[p].dtype == leaf.dtype, p
+        np.testing.assert_array_equal(np.asarray(got[p]), np.asarray(leaf),
+                                      err_msg=p)
+
+
+# --------------------------------------------------------------------------- #
+# server m/v compression (ServerSpec.sync_dtype / sync_k)
+# --------------------------------------------------------------------------- #
+
+
+def test_server_sync_identity_default_bit_exact(problem):
+    """sync_identity() (the default) leaves the adaptive server untouched."""
+    sp_a = engine.method_spec("fedadam", **MS_KW)
+    assert sp_a.server.sync_identity()
+    sp_b = engine.method_spec("fedadam", **MS_KW, server_sync_dtype="",
+                              server_sync_k=1.0)
+    st_a, _ = _run(problem, sp_a)
+    st_b, _ = _run(problem, sp_b)
+    np.testing.assert_array_equal(np.asarray(st_a["params"]["x"]),
+                                  np.asarray(st_b["params"]["x"]))
+
+
+def test_server_state_topk_mask_and_v_floor():
+    """sync_k keeps ONE shared top-|m| index set for m AND v; a dropped
+    coordinate zeroes m and floors v at v_init (default tau^2)."""
+    sv = engine.ServerSpec(kind="adaptive", opt="adam", sync_k=0.5)
+    m = {"x": jnp.asarray([5.0, -0.1, 3.0, 0.2, -4.0, 0.3])}
+    v = {"x": jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])}
+    mc, vc = engine._compress_server_state(sv, m, v)
+    np.testing.assert_array_equal(np.asarray(mc["x"]),
+                                  [5.0, 0.0, 3.0, 0.0, -4.0, 0.0])
+    v0 = sv.tau ** 2
+    np.testing.assert_allclose(np.asarray(vc["x"]),
+                               [1.0, v0, 3.0, v0, 5.0, v0], rtol=1e-6)
+    # exactly k_count coordinates survive — the shared-mask contract
+    assert int((np.asarray(mc["x"]) != 0).sum()) == engine._k_count(0.5, 6)
+    # explicit v_init overrides the floor
+    sv2 = engine.ServerSpec(kind="adaptive", opt="adam", sync_k=0.5,
+                            v_init=7.5)
+    _, vc2 = engine._compress_server_state(sv2, m, v)
+    assert float(np.asarray(vc2["x"])[1]) == 7.5
+
+
+def test_server_state_compression_converges(problem):
+    """bf16 QDQ + top-50% m/v still trains: final loss within 10% of the
+    uncompressed fedadam run on the same budget."""
+    st_a, met_a = _run(problem, engine.method_spec("fedadam", **MS_KW),
+                       rounds=12)
+    st_b, met_b = _run(problem, engine.method_spec(
+        "fedadam", **MS_KW, server_sync_dtype="bfloat16", server_sync_k=0.5),
+        rounds=12)
+    la, lb = float(met_a["loss"]), float(met_b["loss"])
+    assert np.isfinite(lb)
+    assert abs(lb - la) <= 0.10 * abs(la), (la, lb)
+
+
+def test_server_state_bytes_accounting():
+    params = {"x": jax.ShapeDtypeStruct((1000,), jnp.float32)}
+    out = engine.bytes_on_wire(
+        engine.method_spec("fedadam", server_sync_k=0.1), params)
+    # 100 kept coords × ((m, v) fp32 pair + int32 index)
+    assert out["server_state_bytes"] == 100 * (2 * 4 + 4)
+    assert out["server_state_uncompressed_bytes"] == 2 * 1000 * 4
+    out2 = engine.bytes_on_wire(
+        engine.method_spec("fedadam", server_sync_dtype="bfloat16"), params)
+    assert out2["server_state_bytes"] == 2 * 1000 * 2
+    # server-to-server leg: NOT folded into the client->server total
+    assert out2["total_bytes"] == engine.bytes_on_wire(
+        engine.method_spec("fedadam"), params)["total_bytes"]
+    # averaging servers have no adaptive state to compress
+    with pytest.raises(ValueError):
+        engine.method_spec("fedavg", server_sync_k=0.5)
+    with pytest.raises(ValueError):
+        engine.ServerSpec(kind="average", sync_dtype="bfloat16")
+    with pytest.raises(ValueError):
+        engine.ServerSpec(kind="adaptive", sync_k=0.0)
+
+
+# --------------------------------------------------------------------------- #
+# spec validation + the budget rule units
+# --------------------------------------------------------------------------- #
+
+
+def test_controller_spec_validation():
+    for bad in [dict(h_min=0), dict(h_min=5, h_max=4), dict(ema=1.0),
+                dict(ema=0.0), dict(k_min=0.0), dict(k_min=0.6, k_max=0.5),
+                dict(k_max=1.5), dict(k_shrink=0.0), dict(k_growth=0.5),
+                dict(h_growth=1.0), dict(resid_guard=0.0),
+                dict(spread_per_slot=0.0), dict(buffer_max=-1),
+                dict(step_times=(1.0, -2.0))]:
+        with pytest.raises(ValueError):
+            CTRL.ControllerSpec(enabled=True, **bad)
+    with pytest.raises(ValueError):
+        engine.EngineSpec(controller="yes")  # must be a ControllerSpec
+
+
+def test_build_time_conflicts_raise(problem):
+    loss = _quad_loss(problem)
+    ctrl = CTRL.ControllerSpec(enabled=True, h_max=2)
+    # controller owns H_m: a static local_steps bake conflicts
+    with pytest.raises(ValueError, match="local_steps"):
+        engine.build_round_step(loss, engine.method_spec(
+            "fedavg", local_steps=(1, 2, 2, 1), controller=ctrl))
+    # GNS needs every client's delta
+    with pytest.raises(ValueError, match="participation"):
+        engine.build_round_step(loss, engine.method_spec(
+            "fedavg", participation=0.5, controller=ctrl))
+    # b_eff masks WITHIN the allocated FIFO
+    with pytest.raises(ValueError, match="buffer_max"):
+        engine.build_round_step(loss, engine.method_spec(
+            "fedavg", asynchrony=engine.AsyncSpec(buffer_rounds=2),
+            controller=dataclasses.replace(ctrl, buffer_max=4)))
+    # h_max must fit in the round's H microbatches (trace-time)
+    step = engine.build_round_step(loss, engine.method_spec(
+        "fedavg", controller=CTRL.ControllerSpec(enabled=True, h_max=8)))
+    state = engine.init_state(jax.random.PRNGKey(0),
+                              lambda k: {"x": jnp.zeros(24)},
+                              engine.method_spec(
+                                  "fedavg",
+                                  controller=CTRL.ControllerSpec(
+                                      enabled=True, h_max=8)), 4)
+    batch = jax.tree.map(jnp.asarray,
+                         QuadraticLoader(problem, seed=0).round_batch(3))
+    with pytest.raises(ValueError, match="h_max"):
+        step(state, batch, jax.random.PRNGKey(1))
+
+
+def test_budget_rule_units():
+    # no buffer: the >=1 floor of local_steps_from_times is kept
+    sp = CTRL.ControllerSpec(enabled=True, h_max=8,
+                             step_times=(1.0, 2.0, 8.0))
+    np.testing.assert_array_equal(np.asarray(CTRL.budget_h(sp, 4, 3)),
+                                  [4, 2, 1])
+    # with a buffer the floor drops to 0: stragglers sit the round out
+    spb = dataclasses.replace(sp, buffer_max=2)
+    np.testing.assert_array_equal(np.asarray(CTRL.budget_h(spb, 4, 3)),
+                                  [4, 2, 0])
+    # homogeneous trace: everyone runs the full budget
+    sph = CTRL.ControllerSpec(enabled=True, h_max=8)
+    np.testing.assert_array_equal(np.asarray(CTRL.budget_h(sph, 3, 4)),
+                                  [3, 3, 3, 3])
+    # oracle agrees on all three
+    for s, h, n in [(sp, 4, 3), (spb, 4, 3), (sph, 3, 4)]:
+        np.testing.assert_array_equal(np.asarray(CTRL.budget_h(s, h, n)),
+                                      ref_ctrl.budget_h(s, h, n))
+    # step_times length must match the client count
+    with pytest.raises(ValueError, match="step_times"):
+        CTRL.budget_h(sp, 4, 5)
+
+
+def test_buffer_depth_and_half_up():
+    # half-up, not banker's: 2.5 rounds to 3 (round() gives 2)
+    assert CTRL.half_up(2.5) == 3 and round(2.5) == 2
+    assert CTRL.half_up(0.5) == 1
+    assert CTRL.half_up(1.49) == 1
+    mk = lambda **kw: CTRL.ControllerSpec(enabled=True, **kw)
+    assert CTRL.buffer_depth(mk(buffer_max=0)) == 1
+    assert CTRL.buffer_depth(mk(buffer_max=4)) == 1          # homogeneous
+    assert CTRL.buffer_depth(
+        mk(buffer_max=4, step_times=(1.0, 2.5))) == 3        # half_up(2.5)
+    assert CTRL.buffer_depth(
+        mk(buffer_max=2, step_times=(1.0, 9.0))) == 2        # clipped
+    assert CTRL.buffer_depth(
+        mk(buffer_max=4, step_times=(1.0, 2.0), spread_per_slot=0.5)) == 4
+
+
+def test_k_schedule_freezes_without_payload():
+    """No compression => payload_sq = 0 => k and resid_ema never move."""
+    sp = CTRL.ControllerSpec(enabled=True, h_max=4, k_min=0.1)
+    s = ref_ctrl.init_ctrl_state(sp, 4)
+    for t in range(5):
+        s, _ = ref_ctrl.controller_step(
+            sp, s, {"delta_sq_mean": 3.0, "delta_sq_avg": 1.0,
+                    "payload_sq": 0.0, "resid_sq": 0.0})
+        assert float(s["k"]) == 1.0 and float(s["resid_ema"]) == 0.0
+    js = CTRL.init_ctrl_state(sp, 4)
+    for t in range(5):
+        js, _ = CTRL.controller_step(
+            sp, js, {"delta_sq_mean": jnp.float32(3.0),
+                     "delta_sq_avg": jnp.float32(1.0),
+                     "payload_sq": jnp.float32(0.0),
+                     "resid_sq": jnp.float32(0.0)})
+    assert float(js["k"]) == 1.0 and float(js["resid_ema"]) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# launch layer: ctrl leaf + metrics threading through build_train_step
+# --------------------------------------------------------------------------- #
+
+
+def test_build_train_step_threads_controller():
+    from jax.sharding import Mesh
+
+    from repro.configs import ShapeConfig
+    from repro.launch.steps import build_train_step
+
+    dev = np.array(jax.devices("cpu")[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    shape = ShapeConfig("tiny_train", 32, 2, "train")
+    ctrl = engine.ControllerSpec(enabled=True, h_min=1, h_max=2,
+                                 buffer_max=0)
+    built = build_train_step("qwen2-0.5b", shape, mesh, method="fedadam",
+                             reduced=True, h_local=2, het_model="lognormal",
+                             controller=ctrl)
+    spec = built.meta["engine_spec"]
+    assert spec.controller.enabled
+    # the sampled trace was adopted as the controller's step_times, and no
+    # static H_m bake conflicts with the controller
+    assert len(spec.controller.step_times) == built.meta["clients"]
+    assert spec.client.local_steps is None
+    assert built.meta["controller"]["h_max"] == 2
+    state_shape = built.args[0]
+    assert "ctrl" in state_shape
+    assert state_shape["ctrl"]["h_m"].shape == (built.meta["clients"],)
+    state_spec, _ = built.in_shardings
+    assert set(state_spec["ctrl"]) == set(state_shape["ctrl"])
