@@ -1,0 +1,167 @@
+"""Cross-PR benchmark diff: join two schema-v1 BENCH documents on their
+axis coordinates and print per-metric deltas (DESIGN.md §11).
+
+Semantics:
+
+  * rows are joined on the full coordinate tuple (doc axes order of A; both
+    documents must share the same axis set).  A point present in one file
+    but not the other is SURFACED (``only_in_a`` / ``only_in_b``) — never
+    silently dropped — and counts as a difference under --check.
+  * delta sign convention: ``delta = b - a`` (positive means B is larger),
+    ``rel = delta / |a|``.  Whether larger is worse is metric-specific; the
+    diff reports magnitude and direction, it does not editorialize.
+  * wall-clock metrics (``matrix.is_timing_metric``: *_ms*, us_*, *_s
+    phase timings, wall-derived tok/s ...) are classified as ``timing`` —
+    reported separately and never counted as regressions; simulated clocks
+    (sim_*), byte counts, round counts and losses at fixed seeds are
+    ``comparable``.  Two runs of the same rev at the same seeds must show
+    zero comparable deltas.
+
+CLI::
+
+  python benchmarks/diff.py A.json B.json [--rtol R] [--atol A] [--check]
+
+--check exits non-zero when any comparable metric differs beyond tolerance
+or any row/metric is missing from one side (CI runs a fresh result against
+itself and requires a clean pass).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks import matrix
+else:
+    from . import matrix
+
+
+def _key(row, axes):
+    return tuple(str(row["coords"][a]) for a in axes)
+
+
+def _close(a, b, rtol, atol):
+    return math.isclose(a, b, rel_tol=rtol, abs_tol=atol)
+
+
+def diff_docs(doc_a, doc_b, rtol=0.0, atol=0.0):
+    """Structured diff of two validated BENCH documents.  Returns::
+
+      {"bench", "axes", "git_rev_a", "git_rev_b",
+       "only_in_a": [coords...], "only_in_b": [coords...],
+       "rows": [{"coords", "deltas": {metric: {"a","b","delta","rel","kind",
+                                               "changed"}},
+                 "metrics_only_in_a": [...], "metrics_only_in_b": [...]}],
+       "n_comparable_deltas", "n_timing_deltas", "n_missing"}
+    """
+    matrix.assert_valid(doc_a)
+    matrix.assert_valid(doc_b)
+    if doc_a["bench"] != doc_b["bench"]:
+        raise ValueError(f"bench mismatch: {doc_a['bench']!r} vs "
+                         f"{doc_b['bench']!r}")
+    if set(doc_a["axes"]) != set(doc_b["axes"]):
+        raise ValueError(f"axis mismatch: {doc_a['axes']} vs {doc_b['axes']}")
+    axes = list(doc_a["axes"])
+    rows_a = {_key(r, axes): r for r in doc_a["rows"]}
+    rows_b = {_key(r, axes): r for r in doc_b["rows"]}
+    only_a = [rows_a[k]["coords"] for k in rows_a if k not in rows_b]
+    only_b = [rows_b[k]["coords"] for k in rows_b if k not in rows_a]
+    out_rows, n_cmp, n_tim, n_missing_metrics = [], 0, 0, 0
+    for key in rows_a:
+        if key not in rows_b:
+            continue
+        ra, rb = rows_a[key], rows_b[key]
+        ma, mb = ra["metrics"], rb["metrics"]
+        deltas = {}
+        for m in ma:
+            if m not in mb:
+                continue
+            a, b = ma[m], mb[m]
+            kind = "timing" if matrix.is_timing_metric(m) else "comparable"
+            changed = not _close(a, b, rtol, atol)
+            if changed:
+                if kind == "comparable":
+                    n_cmp += 1
+                else:
+                    n_tim += 1
+            deltas[m] = {"a": a, "b": b, "delta": b - a,
+                         "rel": (b - a) / abs(a) if a else
+                         (0.0 if b == a else math.inf),
+                         "kind": kind, "changed": changed}
+        m_only_a = sorted(set(ma) - set(mb))
+        m_only_b = sorted(set(mb) - set(ma))
+        n_missing_metrics += len(m_only_a) + len(m_only_b)
+        out_rows.append({"coords": ra["coords"], "deltas": deltas,
+                         "metrics_only_in_a": m_only_a,
+                         "metrics_only_in_b": m_only_b})
+    return {
+        "bench": doc_a["bench"], "axes": axes,
+        "git_rev_a": doc_a["git_rev"], "git_rev_b": doc_b["git_rev"],
+        "only_in_a": only_a, "only_in_b": only_b,
+        "rows": out_rows,
+        "n_comparable_deltas": n_cmp,
+        "n_timing_deltas": n_tim,
+        "n_missing": len(only_a) + len(only_b) + n_missing_metrics,
+    }
+
+
+def format_report(rep, verbose=False):
+    lines = [f"bench {rep['bench']}: {rep['git_rev_a']} -> "
+             f"{rep['git_rev_b']} (join on {'x'.join(rep['axes'])})"]
+    for coords in rep["only_in_a"]:
+        lines.append(f"  MISSING in B: {coords}")
+    for coords in rep["only_in_b"]:
+        lines.append(f"  MISSING in A: {coords}")
+    for row in rep["rows"]:
+        shown = {m: d for m, d in row["deltas"].items()
+                 if d["changed"] or verbose}
+        if not shown and not row["metrics_only_in_a"] \
+                and not row["metrics_only_in_b"]:
+            continue
+        lines.append(f"  {row['coords']}")
+        for m, d in shown.items():
+            rel = f"{d['rel']:+.2%}" if math.isfinite(d["rel"]) else "inf"
+            lines.append(f"    [{d['kind']:10s}] {m}: {d['a']} -> {d['b']} "
+                         f"(delta {d['delta']:+g}, {rel})")
+        for m in row["metrics_only_in_a"]:
+            lines.append(f"    [missing   ] {m}: only in A")
+        for m in row["metrics_only_in_b"]:
+            lines.append(f"    [missing   ] {m}: only in B")
+    lines.append(f"  {rep['n_comparable_deltas']} comparable delta(s), "
+                 f"{rep['n_timing_deltas']} timing delta(s), "
+                 f"{rep['n_missing']} missing row(s)/metric(s)")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Diff two BENCH_*.json documents on axis coordinates")
+    ap.add_argument("a")
+    ap.add_argument("b")
+    ap.add_argument("--rtol", type=float, default=0.0)
+    ap.add_argument("--atol", type=float, default=0.0)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any comparable delta or missing "
+                         "row/metric (timing deltas never fail)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print unchanged metrics too")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the structured report as JSON")
+    args = ap.parse_args(argv)
+    rep = diff_docs(json.load(open(args.a)), json.load(open(args.b)),
+                    rtol=args.rtol, atol=args.atol)
+    if args.json:
+        print(json.dumps(rep, indent=1))
+    else:
+        print(format_report(rep, verbose=args.verbose))
+    if args.check and (rep["n_comparable_deltas"] or rep["n_missing"]):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

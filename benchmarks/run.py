@@ -1,105 +1,57 @@
-"""Benchmark harness — one benchmark per paper table/figure + roofline feeds.
+"""Benchmark registrations — every bench is a declarative matrix config plus
+a ``run(point, ctx) -> rows`` callable registered in benchmarks/matrix.py
+(DESIGN.md §11).  One runner expands each matrix deterministically, tags
+every row with its full axis coordinates + git_rev + schema version, and
+emits BENCH_<name>.json + results/bench/<name>.csv in the uniform row shape.
 
-Outputs CSV rows ``benchmark,metric,value`` to stdout and per-benchmark CSVs
-under results/bench/.
+Registered benches (axes in parentheses):
 
-  fig1        paper Figure 1: {SGD, Adam-global, Adam-local, OASIS-global,
-              OASIS-local} on heterogeneous classification (30/50/70% main
-              class), loss + accuracy per communication round.
-  thm1        Theorem 1 shape validation on identical-data quadratics:
-              noise-ball vs γ and vs M; transient rate vs (1-γμ/2Γ).
-  thm2        Theorem 2: heterogeneous quadratics; stationary error vs H and
-              vs the analytic bound.
-  sec52       §5.2 critique table: FedAdaGrad step size as τ→0 with
-              v_{-1}=1 (stalls) vs v_{-1}=τ² (does not).
-  engine      wall-time per round for every round-engine method (savic,
-              fedavg, fedadagrad, fedadam, fedyogi, local-adam) on the
-              reduced config; also writes BENCH_engine.json at the repo root.
-  compression bytes-on-wire per round × wall-time for every sync compression
-              operator (none/topk/randk/int8-stochastic, ±error feedback) on
-              a method slice; writes BENCH_compression.json at the repo root.
-  async       simulated wall-clock sync vs staleness-buffered async under the
-              lognormal-straggler systems model for every method (simulated
-              round time + time-to-loss); writes BENCH_async.json.
-  comm        communication volume per round: SAVIC sync vs per-step DDP
-              (analytic, from param counts) + measured collective bytes from
-              dry-run artifacts when present.
-  kernels     µs/call for the Pallas kernels (interpret mode on CPU —
-              correctness-path timing, NOT TPU perf) vs their jnp references,
-              PLUS the fused flat-buffer local step: HBM bytes per launch
-              (xla_cost_properties) fused vs the pre-PR per-leaf kernel path,
-              per PrecondConfig kind, AND the shard-mapped rows (8-device
-              subprocess): per-step collective bytes of the per-shard flat
-              pipeline (~0) vs the naive global flat view's reshard blowup on
-              model-/FSDP-/mixed-sharded plans; writes BENCH_kernels.json at
-              the repo root.
-  serve       production decode path: prefill-cache reuse vs prompt replay
-              (TTFT, phase timings), steady-state decode tok/s with p50/p99
-              per-token latency, and continuous vs static batching on the
-              same Poisson arrival trace; writes BENCH_serve.json at the
-              repo root.
-  train_lm    federated causal-LM training through the production driver
-              (repro.launch.train) on the reduced qwen2-0.5b zoo config:
-              real loss curves, tokens/sec/device and simulated round time
-              for every engine method, plus the full-shape (train_4k on the
-              16×16 mesh) tokens/sec/device projection from the dry-run cost
-              model; writes BENCH_train_lm.json at the repo root.
+  fig1            paper Figure 1 (main_frac × method; per-round rows)
+  thm1 / thm2     Theorem 1/2 shape validation on quadratics (experiment)
+  sec52           §5.2 FedAdaGrad v_{-1} critique (v_init × tau)
+  engine          wall-time per round per engine method (method)
+  compression     bytes-on-wire × wall-time (method × compression)
+  async           sync vs buffered-async vs adaptive controller under the
+                  lognormal straggler model (method × arm) — the old
+                  ``controller`` subcommand is the arm=controller slice
+  comm            analytic sync-vs-DDP communication volume (arch)
+  kernels         Pallas kernel µs/call, interpret mode (kernel)
+  kernels_fused   fused flat-buffer local step HBM bytes (case)
+  kernels_sharded shard-mapped fused-step collective bytes (plan)
+  serve           production decode path (arch × mode)
+  train_lm        federated causal-LM rounds through the production driver
+                  (method; + full-shape projection rows)
+
+Run benches through the matrix CLI::
+
+  python -m benchmarks.matrix run --bench engine [--select method=savic]
+  python -m benchmarks.matrix update-output --bench engine   # no rerun
+  python benchmarks/diff.py A.json B.json --check            # cross-PR diff
+
+or through this module's legacy alias CLI (``python benchmarks/run.py
+[--only engine,async]``), which prints the ``benchmark,metric,value``
+trajectory lines derived from the stored rows.
 """
 from __future__ import annotations
 
 import json
 import math
 import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
-_GIT_REV = None
-
-
-def _git_rev():
-    """Short git rev of the tree the numbers came from (benchmark hygiene:
-    every emitted BENCH row is attributable to a commit). Cached; "unknown"
-    outside a git checkout."""
-    global _GIT_REV
-    if _GIT_REV is None:
-        import subprocess
-        try:
-            _GIT_REV = subprocess.run(
-                ["git", "rev-parse", "--short", "HEAD"],
-                cwd=os.path.dirname(os.path.abspath(__file__)),
-                capture_output=True, text=True, timeout=10,
-            ).stdout.strip() or "unknown"
-        except Exception:
-            _GIT_REV = "unknown"
-    return _GIT_REV
-
-
-def _emit(rows, name):
-    os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, f"{name}.csv")
-    rows = [{**r, "git_rev": _git_rev()} for r in rows]
-    with open(path, "w") as f:
-        if rows:
-            f.write(",".join(rows[0].keys()) + "\n")
-            for r in rows:
-                f.write(",".join(str(v) for v in r.values()) + "\n")
-    return path
-
-
-def _dump_json(name, payload):
-    """Write a BENCH_*.json at the repo root, stamped with the git rev."""
-    path = os.path.join(os.path.dirname(__file__), "..", name)
-    with open(path, "w") as f:
-        json.dump({**payload, "git_rev": _git_rev()}, f, indent=1)
-    return path
+if __package__ in (None, ""):  # script style: python benchmarks/run.py
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks import matrix
+from benchmarks.matrix import BenchDef, MatrixConfig, make_row, register
 
 
 # --------------------------------------------------------------------------- #
-# fig1 — the paper's experiment
+# shared helpers
 # --------------------------------------------------------------------------- #
 
 
@@ -124,69 +76,6 @@ def _mlp(n_in, n_classes, width=128):
         return float((jnp.argmax(logits, -1) == y).mean())
 
     return init, loss, acc
-
-
-def bench_fig1(rounds=25, H=6, fracs=(0.3, 0.5, 0.7), seed=0):
-    from repro.core import PrecondConfig, SavicConfig, engine, savic
-    from repro.data import (ClassificationData, FederatedLoader,
-                            main_class_partition)
-
-    methods = {
-        "SGD": ("identity", "global"),
-        "Adam global": ("adam", "global"),
-        "Adam local": ("adam", "local"),
-        "OASIS global": ("oasis", "global"),
-        "OASIS local": ("oasis", "local"),
-    }
-    data = ClassificationData.make(n=8000, n_classes=10, seed=seed)
-    ntest = 1000
-    xte = jnp.asarray(data.x[-ntest:])
-    yte = jnp.asarray(data.y[-ntest:])
-    rows = []
-    for frac in fracs:
-        parts = main_class_partition(data.y[:-ntest], 10, frac, seed=seed)
-        for mname, (kind, scaling) in methods.items():
-            init, loss, acc = _mlp(data.x.shape[1], 10)
-            # α floor active (corrected Adam debias: D̂ tracks |g| from the
-            # first sync), shared γ across methods — the Fig.1 comparison
-            pc = PrecondConfig(kind=kind, alpha=1e-2)
-            sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling)
-            spec = savic.engine_spec(pc, sv)
-            step = jax.jit(engine.build_round_step(loss, spec))
-            state = engine.init_state(jax.random.PRNGKey(seed), init, spec, 10)
-            loader = FederatedLoader(data.x[:-ntest],
-                                     data.y[:-ntest].astype(np.int32),
-                                     parts, batch_size=64, seed=seed)
-            key = jax.random.PRNGKey(seed + 1)
-            for r in range(rounds):
-                key, k = jax.random.split(key)
-                batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
-                state, met = step(state, batch, k)
-                avg = engine.average_params(state)
-                rows.append({"main_frac": frac, "method": mname, "round": r,
-                             "loss": float(met["loss"]),
-                             "test_acc": acc(avg, xte, yte)})
-    path = _emit(rows, "fig1")
-    # summary: convergence SPEED (the paper's Fig.1 axis is communication
-    # rounds) — rounds to reach loss <= 1.2 and loss at round 10, per method
-    out = []
-    for mname in methods:
-        for frac in (0.3, 0.5):
-            seq = sorted((r["round"], r["loss"]) for r in rows
-                         if r["method"] == mname and r["main_frac"] == frac)
-            hit = next((rd for rd, l in seq if l <= 1.2), -1)
-            out.append(("fig1", f"rounds_to_loss1.2_{int(frac*100)}_"
-                        f"{mname.replace(' ', '_')}", hit))
-        l10 = [r["loss"] for r in rows if r["method"] == mname
-               and r["main_frac"] == 0.5 and r["round"] == 10][0]
-        out.append(("fig1", f"loss_at_r10_50_{mname.replace(' ', '_')}",
-                    round(l10, 3)))
-    return out, path
-
-
-# --------------------------------------------------------------------------- #
-# thm1 / thm2 — quadratic validations
-# --------------------------------------------------------------------------- #
 
 
 def _quad_runner(problem, gamma, H, rounds, kind="identity", alpha=1e-8,
@@ -218,111 +107,6 @@ def _quad_runner(problem, gamma, H, rounds, kind="identity", alpha=1e-8,
         x = savic.average_params(state)["x"]
         dists.append(float(jnp.sum((x - xstar) ** 2)))
     return np.asarray(dists)
-
-
-def bench_thm1():
-    from repro.core import theory
-    from repro.data import QuadraticProblem
-    prob = QuadraticProblem.make(d=24, M=8, mu=0.5, L=4.0, sigma=0.6, seed=1)
-    rows, out = [], []
-    balls = {}
-    for gamma in (0.02, 0.04, 0.08):
-        tail = np.mean([_quad_runner(prob, gamma, 4, 120, seed=s)[-10:].mean()
-                        for s in range(3)])
-        balls[gamma] = tail
-        rows.append({"experiment": "ball_vs_gamma", "gamma": gamma, "H": 4,
-                     "M": 8, "value": tail})
-    out.append(("thm1", "ball_ratio_gamma_4x",
-                round(balls[0.08] / balls[0.02], 2)))
-    for M in (2, 8):
-        p = QuadraticProblem.make(d=24, M=M, mu=0.5, L=4.0, sigma=0.6, seed=1)
-        tail = np.mean([_quad_runner(p, 0.06, 4, 120, seed=s)[-10:].mean()
-                        for s in range(3)])
-        rows.append({"experiment": "ball_vs_M", "gamma": 0.06, "H": 4, "M": M,
-                     "value": tail})
-        balls[f"M{M}"] = tail
-    out.append(("thm1", "ball_ratio_M_4x", round(balls["M2"] / balls["M8"], 2)))
-    d = _quad_runner(prob, 0.05, 4, 40, seed=0)
-    spec = theory.ProblemSpec(mu=0.5, L=4.0, sigma2=0.36, alpha=1, Gamma=1,
-                              M=8, H=4)
-    pred = theory.thm1_rate(spec, 0.05) ** 4
-    meas = (d[9] / d[0]) ** (1 / 9)
-    out.append(("thm1", "transient_rate_measured", round(meas, 4)))
-    out.append(("thm1", "transient_rate_bound_per_round", round(pred, 4)))
-    return out, _emit(rows, "thm1")
-
-
-def bench_thm2():
-    from repro.core import theory
-    from repro.data import QuadraticProblem
-    prob = QuadraticProblem.make(d=24, M=8, mu=0.5, L=4.0, sigma=0.2,
-                                 heterogeneity=6.0, seed=2)
-    rows, out = [], []
-    balls = {}
-    for H in (1, 4, 16):
-        tail = np.mean([_quad_runner(prob, 0.04, H, 320 // H,
-                                     seed=s)[-5:].mean() for s in range(3)])
-        balls[H] = tail
-        rows.append({"experiment": "ball_vs_H", "gamma": 0.04, "H": H,
-                     "sigma_dif2": prob.sigma_dif2(), "value": tail})
-    out.append(("thm2", "ball_H16_over_H1", round(balls[16] / balls[1], 2)))
-    spec = theory.ProblemSpec(mu=0.5, L=4.0, sigma2=0.04, alpha=1.0,
-                              Gamma=1.0, M=8, H=4)
-    rhs = theory.thm2_bound(spec, 0.04, 320 // 4, r0=float(
-        np.sum(prob.x_star() ** 2)), sigma2_dif=prob.sigma_dif2())
-    lhs = 0.5 * 4.0 * balls[4]       # crude f-gap proxy: 0.5·L·dist²
-    out.append(("thm2", "bound_satisfied", int(lhs <= rhs)))
-    out.append(("thm2", "bound_slack_x", round(rhs / max(lhs, 1e-12), 1)))
-    return out, _emit(rows, "thm2")
-
-
-def bench_sec52():
-    from repro.core import engine
-    from repro.data import QuadraticLoader, QuadraticProblem
-    prob = QuadraticProblem.make(d=24, M=4, mu=0.5, L=4.0, sigma=0.3, seed=0)
-    Q = jnp.asarray(prob.Q, jnp.float32)
-    b = jnp.asarray(prob.b, jnp.float32)
-
-    def loss(params, micro):
-        x = params["x"]
-        return 0.5 * (x - b[0]) @ Q[0] @ (x - b[0]) + micro["z"] @ x
-
-    rows, out = [], []
-    for v_init_mode, v_init in (("one", 1.0), ("tau2", None)):
-        for tau in (1e-1, 1e-3, 1e-5):
-            spec = engine.method_spec("fedadagrad", eta=0.05, eta_l=0.5 * tau,
-                                      tau=tau, server_beta1=0.0, v_init=v_init)
-            step = jax.jit(engine.build_round_step(loss, spec))
-            state = engine.init_state(jax.random.PRNGKey(0),
-                                      lambda k: {"x": jnp.zeros(24)}, spec, 4)
-            loader = QuadraticLoader(prob, seed=0)
-            key = jax.random.PRNGKey(1)
-            sn = []
-            for _ in range(5):
-                key, k = jax.random.split(key)
-                state, met = step(state, jax.tree.map(
-                    jnp.asarray, loader.round_batch(5)), k)
-                sn.append(float(met["step_norm"]))
-            rows.append({"v_init": v_init_mode, "tau": tau,
-                         "mean_step_norm": float(np.mean(sn))})
-    stall = [r for r in rows if r["v_init"] == "one"]
-    fixed = [r for r in rows if r["v_init"] == "tau2"]
-    out.append(("sec52", "stall_ratio_vinit1",
-                round(stall[0]["mean_step_norm"]
-                      / max(stall[-1]["mean_step_norm"], 1e-12), 1)))
-    out.append(("sec52", "stall_ratio_vinit_tau2",
-                round(fixed[0]["mean_step_norm"]
-                      / max(fixed[-1]["mean_step_norm"], 1e-12), 2)))
-    return out, _emit(rows, "sec52")
-
-
-# --------------------------------------------------------------------------- #
-# engine — wall-time per round per method (reduced config) -> BENCH_engine.json
-# --------------------------------------------------------------------------- #
-
-
-ENGINE_BENCH_METHODS = ("savic", "fedavg", "fedadagrad", "fedadam", "fedyogi",
-                        "local-adam")
 
 
 def _time_round_loop(spec, init, loss, data, parts, rounds, H, M, seed):
@@ -362,231 +146,438 @@ def _time_round_loop(spec, init, loss, data, parts, rounds, H, M, seed):
     }
 
 
-def bench_engine(rounds=12, H=4, M=8, seed=0):
-    """Per-round wall time for every engine method on the reduced fig1-style
-    config (MLP on heterogeneous classification). Emits the usual CSV plus a
-    machine-readable BENCH_engine.json at the repo root to seed the perf
-    trajectory across PRs."""
-    from repro.core import engine
+def _time(f, *args, n=5):
+    r = f(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _cls_data(ctx, seed, n=2000):
+    """Reduced fig1-style classification task, cached across matrix points."""
+    key = ("cls_data", seed, n)
+    if key not in ctx:
+        from repro.data import ClassificationData, main_class_partition
+        data = ClassificationData.make(n=n, n_classes=10, seed=seed)
+        parts = main_class_partition(data.y, 10, 0.5, seed=seed)
+        ctx[key] = (data, parts)
+    return ctx[key]
+
+
+def _extra(ctx, **kv):
+    ctx.setdefault("config_extra", {}).update(kv)
+
+
+def _uniq(doc, axis):
+    out = []
+    for r in doc["rows"]:
+        v = r["coords"][axis]
+        if v not in out:
+            out.append(v)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# fig1 — the paper's experiment (main_frac × method; per-round rows)
+# --------------------------------------------------------------------------- #
+
+
+FIG1_METHODS = {
+    "SGD": ("identity", "global"),
+    "Adam global": ("adam", "global"),
+    "Adam local": ("adam", "local"),
+    "OASIS global": ("oasis", "global"),
+    "OASIS local": ("oasis", "local"),
+}
+
+
+def _run_fig1(point, ctx):
+    from repro.core import PrecondConfig, SavicConfig, engine, savic
     from repro.data import (ClassificationData, FederatedLoader,
                             main_class_partition)
 
-    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
-    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
-    rows, out = [], []
-    methods_json = {}
-    # adaptive-server step is ~η per coordinate: the Adam/Yogi server needs a
-    # smaller η when clients are scaled too (local-adam)
-    overrides = {"local-adam": dict(eta_l=0.005, eta=0.02)}
-    for method in ENGINE_BENCH_METHODS:
-        init, loss, _ = _mlp(data.x.shape[1], 10)
-        kw = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
-        kw.update(overrides.get(method, {}))
-        spec = engine.method_spec(method, **kw)
-        rec = _time_round_loop(spec, init, loss, data, parts, rounds, H, M,
-                               seed)
-        methods_json[method] = rec
-        rows.append({"method": method, **rec})
-        out.append(("engine", f"round_ms_{method.replace('-', '_')}",
-                    rec["round_ms_mean"]))
-    path_json = _dump_json("BENCH_engine.json", {"bench": "engine_round_walltime",
-                   "config": {"model": "mlp_cls_reduced", "clients": M,
-                              "h_local": H, "rounds": rounds,
-                              "backend": jax.default_backend()},
-                   "methods": methods_json})
-    return out, _emit(rows, "engine")
+    f, seed = point.fixed, point.seed
+    if "fig1_env" not in ctx:
+        data = ClassificationData.make(n=8000, n_classes=10, seed=seed)
+        ntest = 1000
+        ctx["fig1_env"] = dict(
+            data=data, ntest=ntest, parts={},
+            xte=jnp.asarray(data.x[-ntest:]), yte=jnp.asarray(data.y[-ntest:]))
+    env = ctx["fig1_env"]
+    data, ntest = env["data"], env["ntest"]
+    frac, mname = point.coords["main_frac"], point.coords["method"]
+    if frac not in env["parts"]:
+        env["parts"][frac] = main_class_partition(data.y[:-ntest], 10, frac,
+                                                  seed=seed)
+    kind, scaling = FIG1_METHODS[mname]
+    init, loss, acc = _mlp(data.x.shape[1], 10)
+    # α floor active (corrected Adam debias: D̂ tracks |g| from the first
+    # sync), shared γ across methods — the Fig.1 comparison
+    pc = PrecondConfig(kind=kind, alpha=1e-2)
+    sv = SavicConfig(gamma=0.002, beta1=0.9, scaling=scaling)
+    spec = savic.engine_spec(pc, sv)
+    step = jax.jit(engine.build_round_step(loss, spec))
+    state = engine.init_state(jax.random.PRNGKey(seed), init, spec,
+                              f["clients"])
+    loader = FederatedLoader(data.x[:-ntest], data.y[:-ntest].astype(np.int32),
+                             env["parts"][frac], batch_size=64, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    rows = []
+    for r in range(f["rounds"]):
+        key, k = jax.random.split(key)
+        batch = jax.tree.map(jnp.asarray, loader.round_batch(f["h_local"]))
+        state, met = step(state, batch, k)
+        avg = engine.average_params(state)
+        rows.append(make_row({**point.coords, "round": r},
+                             {"loss": float(met["loss"]),
+                              "test_acc": acc(avg, env["xte"], env["yte"])}))
+    return rows
+
+
+def _sum_fig1(doc):
+    # convergence SPEED (the paper's Fig.1 axis is communication rounds):
+    # rounds to reach loss <= 1.2 and loss at round 10, per method
+    out = []
+    rows = doc["rows"]
+    for mname in _uniq(doc, "method"):
+        for frac in (0.3, 0.5):
+            seq = sorted((r["coords"]["round"], r["metrics"]["loss"])
+                         for r in rows if r["coords"]["method"] == mname
+                         and float(r["coords"]["main_frac"]) == frac)
+            if not seq:
+                continue
+            hit = next((rd for rd, l in seq if l <= 1.2), -1)
+            out.append((f"rounds_to_loss1.2_{int(frac * 100)}_"
+                        f"{mname.replace(' ', '_')}", hit))
+        l10 = [r["metrics"]["loss"] for r in rows
+               if r["coords"]["method"] == mname
+               and float(r["coords"]["main_frac"]) == 0.5
+               and r["coords"]["round"] == 10]
+        if l10:
+            out.append((f"loss_at_r10_50_{mname.replace(' ', '_')}",
+                        round(l10[0], 3)))
+    return out
+
+
+register(BenchDef(
+    "fig1",
+    MatrixConfig.make("fig1",
+                      {"main_frac": (0.3, 0.5, 0.7),
+                       "method": tuple(FIG1_METHODS)},
+                      fixed=dict(model="mlp_cls", clients=10, rounds=25,
+                                 h_local=6),
+                      row_axes=("round",)),
+    _run_fig1, _sum_fig1))
+
+
+# --------------------------------------------------------------------------- #
+# thm1 / thm2 — quadratic validations (experiment axis; per-case rows)
+# --------------------------------------------------------------------------- #
+
+
+def _run_thm1(point, ctx):
+    from repro.core import theory
+    from repro.data import QuadraticProblem
+    if "thm1_prob" not in ctx:
+        ctx["thm1_prob"] = QuadraticProblem.make(d=24, M=8, mu=0.5, L=4.0,
+                                                 sigma=0.6, seed=1)
+    prob = ctx["thm1_prob"]
+    exp = point.coords["experiment"]
+    rows = []
+    if exp == "ball_vs_gamma":
+        for gamma in (0.02, 0.04, 0.08):
+            tail = float(np.mean([_quad_runner(prob, gamma, 4, 120,
+                                               seed=s)[-10:].mean()
+                                  for s in range(3)]))
+            rows.append(make_row({**point.coords, "case": f"gamma{gamma}"},
+                                 {"gamma": gamma, "H": 4, "M": 8,
+                                  "value": tail}))
+    elif exp == "ball_vs_M":
+        for M in (2, 8):
+            p = QuadraticProblem.make(d=24, M=M, mu=0.5, L=4.0, sigma=0.6,
+                                      seed=1)
+            tail = float(np.mean([_quad_runner(p, 0.06, 4, 120,
+                                               seed=s)[-10:].mean()
+                                  for s in range(3)]))
+            rows.append(make_row({**point.coords, "case": f"M{M}"},
+                                 {"gamma": 0.06, "H": 4, "M": M,
+                                  "value": tail}))
+    else:  # transient
+        d = _quad_runner(prob, 0.05, 4, 40, seed=0)
+        spec = theory.ProblemSpec(mu=0.5, L=4.0, sigma2=0.36, alpha=1,
+                                  Gamma=1, M=8, H=4)
+        pred = theory.thm1_rate(spec, 0.05) ** 4
+        meas = (d[9] / d[0]) ** (1 / 9)
+        rows.append(make_row(
+            {**point.coords, "case": "rate"},
+            {"transient_rate_measured": round(float(meas), 4),
+             "transient_rate_bound_per_round": round(float(pred), 4)}))
+    return rows
+
+
+def _sum_thm1(doc):
+    m = {r["coords"]["case"]: r["metrics"] for r in doc["rows"]}
+    out = []
+    if "gamma0.08" in m and "gamma0.02" in m:
+        out.append(("ball_ratio_gamma_4x",
+                    round(m["gamma0.08"]["value"] / m["gamma0.02"]["value"],
+                          2)))
+    if "M2" in m and "M8" in m:
+        out.append(("ball_ratio_M_4x",
+                    round(m["M2"]["value"] / m["M8"]["value"], 2)))
+    if "rate" in m:
+        out.append(("transient_rate_measured",
+                    m["rate"]["transient_rate_measured"]))
+        out.append(("transient_rate_bound_per_round",
+                    m["rate"]["transient_rate_bound_per_round"]))
+    return out
+
+
+register(BenchDef(
+    "thm1",
+    MatrixConfig.make("thm1",
+                      {"experiment": ("ball_vs_gamma", "ball_vs_M",
+                                      "transient")},
+                      fixed=dict(d=24, clients=8, mu=0.5, L=4.0, sigma=0.6,
+                                 h_local=4),
+                      row_axes=("case",)),
+    _run_thm1, _sum_thm1))
+
+
+def _thm2_ball(ctx, prob, H):
+    balls = ctx.setdefault("thm2_balls", {})
+    if H not in balls:
+        balls[H] = float(np.mean([_quad_runner(prob, 0.04, H, 320 // H,
+                                               seed=s)[-5:].mean()
+                                  for s in range(3)]))
+    return balls[H]
+
+
+def _run_thm2(point, ctx):
+    from repro.core import theory
+    from repro.data import QuadraticProblem
+    if "thm2_prob" not in ctx:
+        ctx["thm2_prob"] = QuadraticProblem.make(d=24, M=8, mu=0.5, L=4.0,
+                                                 sigma=0.2, heterogeneity=6.0,
+                                                 seed=2)
+    prob = ctx["thm2_prob"]
+    if point.coords["experiment"] == "ball_vs_H":
+        rows = []
+        for H in (1, 4, 16):
+            rows.append(make_row(
+                {**point.coords, "case": f"H{H}"},
+                {"gamma": 0.04, "H": H,
+                 "sigma_dif2": float(prob.sigma_dif2()),
+                 "value": _thm2_ball(ctx, prob, H)}))
+        return rows
+    # bound: crude f-gap proxy 0.5·L·dist² vs the analytic Thm-2 rhs
+    spec = theory.ProblemSpec(mu=0.5, L=4.0, sigma2=0.04, alpha=1.0,
+                              Gamma=1.0, M=8, H=4)
+    rhs = float(theory.thm2_bound(spec, 0.04, 320 // 4,
+                                  r0=float(np.sum(prob.x_star() ** 2)),
+                                  sigma2_dif=prob.sigma_dif2()))
+    lhs = 0.5 * 4.0 * _thm2_ball(ctx, prob, 4)
+    return [make_row({**point.coords, "case": "check"},
+                     {"bound_satisfied": int(lhs <= rhs),
+                      "lhs": float(lhs), "rhs": rhs,
+                      "bound_slack_x": round(rhs / max(lhs, 1e-12), 1)})]
+
+
+def _sum_thm2(doc):
+    m = {r["coords"]["case"]: r["metrics"] for r in doc["rows"]}
+    out = []
+    if "H16" in m and "H1" in m:
+        out.append(("ball_H16_over_H1",
+                    round(m["H16"]["value"] / m["H1"]["value"], 2)))
+    if "check" in m:
+        out.append(("bound_satisfied", m["check"]["bound_satisfied"]))
+        out.append(("bound_slack_x", m["check"]["bound_slack_x"]))
+    return out
+
+
+register(BenchDef(
+    "thm2",
+    MatrixConfig.make("thm2", {"experiment": ("ball_vs_H", "bound")},
+                      fixed=dict(d=24, clients=8, mu=0.5, L=4.0, sigma=0.2,
+                                 heterogeneity=6.0, gamma=0.04),
+                      row_axes=("case",)),
+    _run_thm2, _sum_thm2))
+
+
+# --------------------------------------------------------------------------- #
+# sec52 — §5.2 FedAdaGrad v_{-1} critique (v_init × tau)
+# --------------------------------------------------------------------------- #
+
+
+def _run_sec52(point, ctx):
+    from repro.core import engine
+    from repro.data import QuadraticLoader, QuadraticProblem
+    if "sec52_prob" not in ctx:
+        ctx["sec52_prob"] = QuadraticProblem.make(d=24, M=4, mu=0.5, L=4.0,
+                                                  sigma=0.3, seed=0)
+    prob = ctx["sec52_prob"]
+    Q = jnp.asarray(prob.Q, jnp.float32)
+    b = jnp.asarray(prob.b, jnp.float32)
+
+    def loss(params, micro):
+        x = params["x"]
+        return 0.5 * (x - b[0]) @ Q[0] @ (x - b[0]) + micro["z"] @ x
+
+    f = point.fixed
+    tau = point.coords["tau"]
+    v_init = 1.0 if point.coords["v_init"] == "one" else None
+    spec = engine.method_spec("fedadagrad", eta=0.05, eta_l=0.5 * tau,
+                              tau=tau, server_beta1=0.0, v_init=v_init)
+    step = jax.jit(engine.build_round_step(loss, spec))
+    state = engine.init_state(jax.random.PRNGKey(0),
+                              lambda k: {"x": jnp.zeros(24)}, spec,
+                              f["clients"])
+    loader = QuadraticLoader(prob, seed=0)
+    key = jax.random.PRNGKey(1)
+    sn = []
+    for _ in range(f["rounds"]):
+        key, k = jax.random.split(key)
+        state, met = step(state, jax.tree.map(
+            jnp.asarray, loader.round_batch(f["h_local"])), k)
+        sn.append(float(met["step_norm"]))
+    return [make_row(point.coords, {"mean_step_norm": float(np.mean(sn))})]
+
+
+def _sum_sec52(doc):
+    m = {(r["coords"]["v_init"], float(r["coords"]["tau"])): r["metrics"]
+         for r in doc["rows"]}
+    out = []
+    for mode, label, nd in (("one", "stall_ratio_vinit1", 1),
+                            ("tau2", "stall_ratio_vinit_tau2", 2)):
+        hi, lo = m.get((mode, 0.1)), m.get((mode, 1e-5))
+        if hi and lo:
+            out.append((label, round(hi["mean_step_norm"]
+                                     / max(lo["mean_step_norm"], 1e-12), nd)))
+    return out
+
+
+register(BenchDef(
+    "sec52",
+    MatrixConfig.make("sec52",
+                      {"v_init": ("one", "tau2"), "tau": (0.1, 0.001, 1e-5)},
+                      fixed=dict(method="fedadagrad", rounds=5, h_local=5,
+                                 clients=4)),
+    _run_sec52, _sum_sec52))
+
+
+# --------------------------------------------------------------------------- #
+# engine — wall-time per round per method (reduced config)
+# --------------------------------------------------------------------------- #
+
+
+ENGINE_BENCH_METHODS = ("savic", "fedavg", "fedadagrad", "fedadam", "fedyogi",
+                        "local-adam")
+# shared lr settings (the async/controller arms race on the same footing);
+# the adaptive-server step is ~η per coordinate, so the Adam/Yogi server
+# needs a smaller η when clients are scaled too (local-adam)
+ASYNC_BENCH_KW = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
+ASYNC_BENCH_OVERRIDES = {"local-adam": dict(eta_l=0.005, eta=0.02)}
+
+
+def _run_engine(point, ctx):
+    from repro.core import engine
+    f, seed = point.fixed, point.seed
+    data, parts = _cls_data(ctx, seed)
+    method = point.coords["method"]
+    init, loss, _ = _mlp(data.x.shape[1], 10)
+    kw = dict(ASYNC_BENCH_KW)
+    kw.update(ASYNC_BENCH_OVERRIDES.get(method, {}))
+    spec = engine.method_spec(method, **kw)
+    rec = _time_round_loop(spec, init, loss, data, parts, f["rounds"],
+                           f["h_local"], f["clients"], seed)
+    _extra(ctx, backend=jax.default_backend())
+    return [make_row(point.coords, rec)]
+
+
+def _sum_engine(doc):
+    return [(f"round_ms_{r['coords']['method'].replace('-', '_')}",
+             r["metrics"]["round_ms_mean"]) for r in doc["rows"]]
+
+
+register(BenchDef(
+    "engine",
+    MatrixConfig.make("engine", {"method": ENGINE_BENCH_METHODS},
+                      fixed=dict(model="mlp_cls_reduced", clients=8,
+                                 h_local=4, rounds=12)),
+    _run_engine, _sum_engine))
 
 
 # --------------------------------------------------------------------------- #
 # compression — bytes-on-wire × wall-time per (method, operator)
-#               -> BENCH_compression.json
 # --------------------------------------------------------------------------- #
 
 
-COMPRESSION_BENCH_CASES = (
-    ("none", 1.0, False),
-    ("topk", 0.1, False),
-    ("topk", 0.1, True),
-    ("randk", 0.1, False),
-    ("int8-stochastic", 1.0, False),
-)
 COMPRESSION_BENCH_METHODS = ("savic", "fedavg", "fedadam")
 
 
-def bench_compression(rounds=10, H=4, M=8, seed=0):
-    """Every compression operator × a representative method slice on the
-    reduced fig1-style config: bytes-on-wire per round alongside wall time, so
-    BENCH_compression.json seeds a communication-volume trajectory (not just a
-    latency one). EF topk / int8 rows double as end-to-end convergence
-    sanity (final_loss)."""
+def _run_compression(point, ctx):
     from repro.core import engine
-    from repro.data import ClassificationData, main_class_partition
+    f, seed = point.fixed, point.seed
+    data, parts = _cls_data(ctx, seed)
+    method = point.coords["method"]
+    op, k, ef = matrix.COMPRESSION_VARIANTS[point.coords["compression"]]
+    init, loss, _ = _mlp(data.x.shape[1], 10)
+    spec = engine.method_spec(
+        method, **ASYNC_BENCH_KW,
+        compression=engine.CompressionSpec(op=op, k=k, error_feedback=ef))
+    rec = _time_round_loop(spec, init, loss, data, parts, f["rounds"],
+                           f["h_local"], f["clients"], seed)
+    _extra(ctx, backend=jax.default_backend())
+    return [make_row(point.coords, rec,
+                     info={"op": op, "k": k, "error_feedback": ef})]
 
-    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
-    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
-    rows, out = [], []
-    entries = {}
-    for method in COMPRESSION_BENCH_METHODS:
-        for op, k, ef in COMPRESSION_BENCH_CASES:
-            init, loss, _ = _mlp(data.x.shape[1], 10)
-            spec = engine.method_spec(
-                method, gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1,
-                compression=engine.CompressionSpec(op=op, k=k,
-                                                   error_feedback=ef))
-            rec = _time_round_loop(spec, init, loss, data, parts, rounds, H,
-                                   M, seed)
-            tag = f"{method}__{op}" + (f"_k{k}" if op in ("topk", "randk")
-                                       else "") + ("_ef" if ef else "")
-            entries[tag] = rec
-            rows.append({"method": method, "op": op, "k": k,
-                         "error_feedback": ef, **rec})
-    for method in COMPRESSION_BENCH_METHODS:
-        base = entries[f"{method}__none"]
-        ef_ = entries[f"{method}__topk_k0.1_ef"]
-        out.append(("compression", f"wire_x_topk_{method.replace('-', '_')}",
+
+def _sum_compression(doc):
+    m = {(r["coords"]["method"], r["coords"]["compression"]): r["metrics"]
+         for r in doc["rows"]}
+    out = []
+    for method in _uniq(doc, "method"):
+        base, ef = m.get((method, "none")), m.get((method, "topk0.1-ef"))
+        if not base or not ef:
+            continue
+        mname = method.replace("-", "_")
+        out.append((f"wire_x_topk_{mname}",
                     round(base["wire_bytes_per_round"]
-                          / ef_["wire_bytes_per_round"], 1)))
-        out.append(("compression", f"round_ms_topk_ef_{method.replace('-', '_')}",
-                    ef_["round_ms_mean"]))
-    path_json = _dump_json("BENCH_compression.json", {"bench": "compression_bytes_x_walltime",
-                   "config": {"model": "mlp_cls_reduced", "clients": M,
-                              "h_local": H, "rounds": rounds,
-                              "backend": jax.default_backend()},
-                   "entries": entries})
-    return out, _emit(rows, "compression")
+                          / ef["wire_bytes_per_round"], 1)))
+        out.append((f"round_ms_topk_ef_{mname}", ef["round_ms_mean"]))
+    return out
+
+
+register(BenchDef(
+    "compression",
+    MatrixConfig.make("compression",
+                      {"method": COMPRESSION_BENCH_METHODS,
+                       "compression": tuple(matrix.COMPRESSION_VARIANTS)},
+                      fixed=dict(model="mlp_cls_reduced", clients=8,
+                                 h_local=4, rounds=10)),
+    _run_compression, _sum_compression,
+    note="EF topk / int8 rows double as end-to-end convergence sanity "
+         "(final_loss); wire bytes are analytic (engine.bytes_on_wire)"))
 
 
 # --------------------------------------------------------------------------- #
-# async — simulated wall-clock sync vs async under systems heterogeneity
-#         -> BENCH_async.json
+# async — sync vs buffered-async vs adaptive controller (method × arm)
 # --------------------------------------------------------------------------- #
 
 
 ASYNC_BENCH_BUFFER = 4       # staleness budget B for the async arm
 ASYNC_BENCH_SIGMA = 0.8      # lognormal straggler sigma
-# shared lr settings (bench_controller races on the same footing)
-ASYNC_BENCH_KW = dict(gamma=0.002, alpha=1e-2, eta_l=0.02, eta=0.1)
-ASYNC_BENCH_OVERRIDES = {"local-adam": dict(eta_l=0.005, eta=0.02)}
-# staleness-scaled server lr for buffered arms (see bench_async docstring)
+# staleness-scaled server lr for buffered arms (the FedBuff discipline: a
+# lagged pseudo-gradient through an adaptive normalizer needs a smaller
+# server step or it oscillates divergently — measured, η=0.1 FedAdam ends
+# 90× above init under B=4 lag)
 ASYNC_BENCH_ASYNC_OVERRIDES = {"fedadagrad": dict(eta=0.025),
                                "fedadam": dict(eta=0.015),
                                "fedyogi": dict(eta=0.015),
                                "local-adam": dict(eta=0.005)}
-
-
-def bench_async(rounds=30, H=6, M=8, seed=0):
-    """Sync barrier vs staleness-buffered async for every engine method under
-    the lognormal-straggler systems model (DESIGN.md §5).
-
-    The sync arm runs uniform H for ``rounds`` rounds with the server waiting
-    for the slowest client (simulated round time max_m t_m·H). The async arm
-    gives stragglers a budgeted H_m (fewer local steps) and a B-round
-    staleness buffer, so the simulated server period is max_m(t_m·H_m)/B —
-    and it gets 4·rounds rounds, matching the B=4 staleness budget (its
-    simulated rounds are ~B× shorter, so both arms spend comparable simulated
-    time). Adaptive servers get a staleness-scaled-down η in the async arm
-    (the FedBuff discipline: a lagged pseudo-gradient through an adaptive
-    normalizer needs a smaller server step or it oscillates divergently —
-    measured here, η=0.1 FedAdam ends 90× above init under B=4 lag). Both
-    arms race the simulated clock to a shared target loss (55% of the sync
-    arm's round-0 loss); writes BENCH_async.json at the repo root to seed the
-    async-speedup trajectory.
-    """
-    from repro.core import engine
-    from repro.data import ClassificationData, main_class_partition
-    from repro.data.federated import (local_steps_from_times,
-                                      sample_step_times, simulated_round_time)
-
-    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
-    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
-    step_times = sample_step_times("lognormal", M, seed=seed,
-                                   sigma=ASYNC_BENCH_SIGMA)
-    h_m = tuple(int(h) for h in local_steps_from_times(step_times, H))
-    sim_t = {
-        "sync": simulated_round_time(step_times, [H] * M, barrier="sync"),
-        "async": simulated_round_time(step_times, h_m, barrier="async",
-                                      buffer_rounds=ASYNC_BENCH_BUFFER),
-    }
-    arms = {
-        "sync": dict(),
-        "async": dict(local_steps=h_m,
-                      asynchrony=engine.AsyncSpec(
-                          buffer_rounds=ASYNC_BENCH_BUFFER,
-                          weighting="polynomial")),
-    }
-    arm_rounds = {"sync": rounds, "async": ASYNC_BENCH_BUFFER * rounds}
-    overrides = ASYNC_BENCH_OVERRIDES
-    async_overrides = ASYNC_BENCH_ASYNC_OVERRIDES
-    rows, out = [], []
-    entries = {}
-    from repro.data import FederatedLoader
-    for method in ENGINE_BENCH_METHODS:
-        entries[method] = {}
-        target = None
-        for arm, arm_kw in arms.items():
-            init, loss, _ = _mlp(data.x.shape[1], 10)
-            kw = dict(ASYNC_BENCH_KW)
-            kw.update(overrides.get(method, {}))
-            if arm == "async":
-                kw.update(async_overrides.get(method, {}))
-            spec = engine.method_spec(method, **kw, **arm_kw)
-            step = jax.jit(engine.build_round_step(loss, spec))
-            state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
-            loader = FederatedLoader(data.x, data.y.astype(np.int32),
-                                     parts[:M], batch_size=32, seed=seed)
-            key = jax.random.PRNGKey(seed + 1)
-            times, losses = [], []
-            for _ in range(arm_rounds[arm]):
-                key, k = jax.random.split(key)
-                batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
-                t0 = time.perf_counter()
-                state, met = step(state, batch, k)
-                jax.block_until_ready(state)
-                times.append((time.perf_counter() - t0) * 1e3)
-                losses.append(float(met["loss"]))
-            if target is None:
-                target = losses[0] * 0.55   # shared, reachable by both arms
-            r_hit = next((r + 1 for r, l in enumerate(losses) if l <= target),
-                         -1)
-            rec = {
-                "sim_round_time": round(sim_t[arm], 4),
-                "round_ms_mean": round(float(np.mean(times[1:])), 3),
-                "rounds": arm_rounds[arm],
-                "final_loss": round(losses[-1], 4),
-                "target_loss": round(target, 4),
-                "rounds_to_target": r_hit,
-                "sim_time_to_target": round(r_hit * sim_t[arm], 4)
-                if r_hit > 0 else -1.0,
-            }
-            entries[method][arm] = rec
-            rows.append({"method": method, "arm": arm, **rec})
-        s, a = entries[method]["sync"], entries[method]["async"]
-        if s["sim_time_to_target"] > 0 and a["sim_time_to_target"] > 0:
-            out.append(("async",
-                        f"sim_speedup_{method.replace('-', '_')}",
-                        round(s["sim_time_to_target"]
-                              / a["sim_time_to_target"], 2)))
-        out.append(("async", f"final_loss_async_{method.replace('-', '_')}",
-                    a["final_loss"]))
-    path_json = _dump_json("BENCH_async.json", {"bench": "async_simulated_walltime",
-                   "config": {"model": "mlp_cls_reduced", "clients": M,
-                              "h_local": H, "rounds": rounds,
-                              "het_model": "lognormal",
-                              "sigma": ASYNC_BENCH_SIGMA,
-                              "step_times": [round(float(t), 4)
-                                             for t in step_times],
-                              "local_steps_async": list(h_m),
-                              "buffer_rounds": ASYNC_BENCH_BUFFER,
-                              "staleness_weight": "polynomial",
-                              "backend": jax.default_backend()},
-                   "methods": entries})
-    return out, _emit(rows, "async")
-
-
-# --------------------------------------------------------------------------- #
-# controller — adaptive knob schedule races the static arms of bench_async
-# --------------------------------------------------------------------------- #
-
 
 # Per-method controller tuning (the static arms get per-method lr overrides;
 # the controller arm gets per-method gns targets — same discipline). The GNS
@@ -608,82 +599,132 @@ CONTROLLER_TUNE = {
 }
 
 
-def bench_controller(rounds=30, H=6, M=8, seed=0):
-    """Adaptive communication-budget controller vs the best static config,
-    per method, on the SAME lognormal straggler trace / data / learning
-    rates as bench_async (DESIGN.md §10).
-
-    The controller arm starts at a cheap round shape (H_t = 2 under the
-    min(t)-bounded budget rule: 4 of 8 clients active, stragglers sitting
-    rounds out inside the staleness window) and grows H_t geometrically
-    while the gradient-noise-scale EMA exceeds its ``noise_target``. Its
-    per-round simulated time comes from the REALIZED knobs — the
-    ``ctrl_h_m``/``ctrl_b_eff`` metrics the engine logs — through the same
-    ``simulated_round_time`` systems model the static arms use, so the race
-    is apples-to-apples: cumulative simulated clock until the method's
-    recorded ``target_loss`` from BENCH_async.json (regenerated first if
-    missing). Inserts a "controller" entry per method into BENCH_async.json
-    next to the static sync/async arms.
-    """
-    from repro.core import engine
-    from repro.data import (ClassificationData, FederatedLoader,
-                            main_class_partition)
-    from repro.data.federated import sample_step_times, simulated_round_time
-
-    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    async_json = os.path.join(repo_root, "BENCH_async.json")
-    if not os.path.exists(async_json):
-        bench_async(rounds=rounds, H=H, M=M, seed=seed)
-    with open(async_json) as f:
-        base = json.load(f)
-
-    data = ClassificationData.make(n=2000, n_classes=10, seed=seed)
-    parts = main_class_partition(data.y, 10, 0.5, seed=seed)
+def _async_env(ctx, fixed, seed):
+    """Straggler trace + data shared by all three arms (and recorded in the
+    document config so the race is reproducible from the artifact alone)."""
+    if "async_env" in ctx:
+        return ctx["async_env"]
+    from repro.data.federated import (local_steps_from_times,
+                                      sample_step_times, simulated_round_time)
+    M, H = fixed["clients"], fixed["h_local"]
+    data, parts = _cls_data(ctx, seed)
     step_times = sample_step_times("lognormal", M, seed=seed,
                                    sigma=ASYNC_BENCH_SIGMA)
-    n_rounds = ASYNC_BENCH_BUFFER * rounds   # same round count as async arm
-    rows, out = [], []
-    entries = base["methods"]
-    for method in ENGINE_BENCH_METHODS:
+    h_m = tuple(int(h) for h in local_steps_from_times(step_times, H))
+    sim_t = {
+        "sync": simulated_round_time(step_times, [H] * M, barrier="sync"),
+        "async": simulated_round_time(step_times, h_m, barrier="async",
+                                      buffer_rounds=ASYNC_BENCH_BUFFER),
+    }
+    ctx["async_env"] = dict(data=data, parts=parts, step_times=step_times,
+                            h_m=h_m, sim_t=sim_t)
+    _extra(ctx,
+           het_model="lognormal", sigma=ASYNC_BENCH_SIGMA,
+           step_times=[round(float(t), 4) for t in step_times],
+           local_steps_async=list(h_m),
+           buffer_rounds=ASYNC_BENCH_BUFFER,
+           staleness_weight="polynomial",
+           controller={"h_min": CONTROLLER_H_MIN, "h_max": H,
+                       "buffer_max": ASYNC_BENCH_BUFFER,
+                       "rounds": ASYNC_BENCH_BUFFER * fixed["rounds"],
+                       "per_method_tune": CONTROLLER_TUNE},
+           backend=jax.default_backend())
+    return ctx["async_env"]
+
+
+def _async_target(ctx, method):
+    """Shared time-to-loss target: set by the sync arm of this run; partial
+    (--select) runs fall back to the committed sync row."""
+    t = ctx.get("targets", {}).get(method)
+    if t is not None:
+        return t
+    path = matrix.bench_paths("async")[0]
+    if os.path.exists(path):
+        doc = json.load(open(path))
+        for r in doc.get("rows", []):
+            if r["coords"].get("method") == method \
+                    and r["coords"].get("arm") == "sync":
+                return r["metrics"]["target_loss"]
+    raise RuntimeError(f"no sync target_loss for {method!r}: run the sync "
+                       "arm first (or keep arm=sync in --select)")
+
+
+def _run_async(point, ctx):
+    """One (method, arm) race against the simulated straggler clock.
+
+    sync: uniform H, server waits for the slowest client (period max t_m·H).
+    async: budgeted H_m + B-round staleness buffer (period max(t_m·H_m)/B),
+    4·rounds rounds so both arms spend comparable simulated time.
+    controller: the adaptive arm (DESIGN.md §10) — H_t grows while the
+    gradient-noise-scale EMA exceeds its per-method target; its simulated
+    clock advances by the REALIZED ctrl_h_m/ctrl_b_eff knobs through the
+    same systems model, so the race is apples-to-apples.
+    """
+    from repro.core import engine
+    from repro.data import FederatedLoader
+    from repro.data.federated import simulated_round_time
+
+    f, seed = point.fixed, point.seed
+    M, H = f["clients"], f["h_local"]
+    env = _async_env(ctx, f, seed)
+    method, arm = point.coords["method"], point.coords["arm"]
+    kw = dict(ASYNC_BENCH_KW)
+    kw.update(ASYNC_BENCH_OVERRIDES.get(method, {}))
+    if arm in ("async", "controller"):
+        kw.update(ASYNC_BENCH_ASYNC_OVERRIDES.get(method, {}))
+    init, loss, _ = _mlp(env["data"].x.shape[1], 10)
+    n_rounds = f["rounds"] if arm == "sync" else ASYNC_BENCH_BUFFER * f["rounds"]
+    tune = None
+    if arm == "sync":
+        arm_kw = {}
+    elif arm == "async":
+        arm_kw = dict(local_steps=env["h_m"],
+                      asynchrony=engine.AsyncSpec(
+                          buffer_rounds=ASYNC_BENCH_BUFFER,
+                          weighting="polynomial"))
+    else:
         tune = dict(h_min=CONTROLLER_H_MIN)
         tune.update(CONTROLLER_TUNE.get(method, {}))
-        ctrl = engine.ControllerSpec(
-            enabled=True, h_max=H, buffer_max=ASYNC_BENCH_BUFFER,
-            step_times=tuple(float(t) for t in step_times), **tune)
-        init, loss, _ = _mlp(data.x.shape[1], 10)
-        kw = dict(ASYNC_BENCH_KW)
-        kw.update(ASYNC_BENCH_OVERRIDES.get(method, {}))
-        kw.update(ASYNC_BENCH_ASYNC_OVERRIDES.get(method, {}))
-        spec = engine.method_spec(
-            method, **kw,
+        arm_kw = dict(
             asynchrony=engine.AsyncSpec(buffer_rounds=ASYNC_BENCH_BUFFER,
                                         weighting="polynomial"),
-            controller=ctrl)
-        step = jax.jit(engine.build_round_step(loss, spec))
-        state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
-        loader = FederatedLoader(data.x, data.y.astype(np.int32), parts[:M],
-                                 batch_size=32, seed=seed)
-        key = jax.random.PRNGKey(seed + 1)
-        target = entries[method]["sync"]["target_loss"]
-        times, losses, h_t_log = [], [], []
-        sim_elapsed, sim_hit, r_hit = 0.0, -1.0, -1
-        for _ in range(n_rounds):
-            key, k = jax.random.split(key)
-            batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
-            t0 = time.perf_counter()
-            state, met = step(state, batch, k)
-            jax.block_until_ready(state)
-            times.append((time.perf_counter() - t0) * 1e3)
+            controller=engine.ControllerSpec(
+                enabled=True, h_max=H, buffer_max=ASYNC_BENCH_BUFFER,
+                step_times=tuple(float(t) for t in env["step_times"]),
+                **tune))
+    spec = engine.method_spec(method, **kw, **arm_kw)
+    step = jax.jit(engine.build_round_step(loss, spec))
+    state = engine.init_state(jax.random.PRNGKey(seed), init, spec, M)
+    loader = FederatedLoader(env["data"].x, env["data"].y.astype(np.int32),
+                             env["parts"][:M], batch_size=32, seed=seed)
+    key = jax.random.PRNGKey(seed + 1)
+    times, losses, h_t_log = [], [], []
+    sim_elapsed, sim_hit, r_hit = 0.0, -1.0, -1
+    target = None if arm == "sync" else _async_target(ctx, method)
+    for _ in range(n_rounds):
+        key, k = jax.random.split(key)
+        batch = jax.tree.map(jnp.asarray, loader.round_batch(H))
+        t0 = time.perf_counter()
+        state, met = step(state, batch, k)
+        jax.block_until_ready(state)
+        times.append((time.perf_counter() - t0) * 1e3)
+        losses.append(float(met["loss"]))
+        if arm == "controller":
             # simulated clock advances by the round shape the controller
             # actually realized this round
             h_real = [int(h) for h in np.asarray(met["ctrl_h_m"])]
             sim_elapsed += simulated_round_time(
-                step_times, h_real, barrier="async",
+                env["step_times"], h_real, barrier="async",
                 buffer_rounds=int(met["ctrl_b_eff"]))
-            losses.append(float(met["loss"]))
             h_t_log.append(int(met["ctrl_h_t"]))
+            if target is None:
+                target = _async_target(ctx, method)
             if r_hit < 0 and losses[-1] <= target:
                 r_hit, sim_hit = len(losses), round(sim_elapsed, 4)
+    if arm == "sync" and target is None:
+        target = losses[0] * 0.55   # shared, reachable by both arms
+        ctx.setdefault("targets", {})[method] = target
+    if arm == "controller":
         # compact knob trajectory: (round, H_t) at each change point
         h_t_changes = [[r, h] for r, h in enumerate(h_t_log)
                        if r == 0 or h != h_t_log[r - 1]]
@@ -692,132 +733,119 @@ def bench_controller(rounds=30, H=6, M=8, seed=0):
             "round_ms_mean": round(float(np.mean(times[1:])), 3),
             "rounds": n_rounds,
             "final_loss": round(losses[-1], 4),
-            "target_loss": target,
+            "target_loss": round(target, 4),
             "rounds_to_target": r_hit,
             "sim_time_to_target": sim_hit,
-            "h_t_trajectory": h_t_changes,
             "b_eff": int(np.asarray(state["ctrl"]["b_eff"])),
+            "h_t_trajectory": h_t_changes,
             "tune": tune,
         }
-        entries[method]["controller"] = rec
-        rows.append({"method": method, "arm": "controller", **rec})
-        statics = [entries[method][a]["sim_time_to_target"]
-                   for a in ("sync", "async")
-                   if entries[method][a]["sim_time_to_target"] > 0]
+    else:
+        r_hit = next((r + 1 for r, l in enumerate(losses) if l <= target), -1)
+        rec = {
+            "sim_round_time": round(env["sim_t"][arm], 4),
+            "round_ms_mean": round(float(np.mean(times[1:])), 3),
+            "rounds": n_rounds,
+            "final_loss": round(losses[-1], 4),
+            "target_loss": round(target, 4),
+            "rounds_to_target": r_hit,
+            "sim_time_to_target": round(r_hit * env["sim_t"][arm], 4)
+            if r_hit > 0 else -1.0,
+        }
+    return [make_row(point.coords, rec)]
+
+
+def _sum_async(doc):
+    m = {(r["coords"]["method"], r["coords"]["arm"]): r["metrics"]
+         for r in doc["rows"]}
+    out = []
+    for method in _uniq(doc, "method"):
         mname = method.replace("-", "_")
-        out.append(("controller", f"sim_time_adaptive_{mname}", sim_hit))
-        if statics and sim_hit > 0:
-            out.append(("controller", f"sim_speedup_vs_best_static_{mname}",
-                        round(min(statics) / sim_hit, 2)))
-    base["config"]["controller"] = {
-        "h_min": CONTROLLER_H_MIN, "h_max": H,
-        "buffer_max": ASYNC_BENCH_BUFFER, "rounds": n_rounds,
-        "per_method_tune": CONTROLLER_TUNE,
-    }
-    _dump_json("BENCH_async.json", base)
-    return out, _emit(rows, "controller")
+        s, a, c = (m.get((method, arm))
+                   for arm in ("sync", "async", "controller"))
+        if s and a and s["sim_time_to_target"] > 0 \
+                and a["sim_time_to_target"] > 0:
+            out.append((f"sim_speedup_{mname}",
+                        round(s["sim_time_to_target"]
+                              / a["sim_time_to_target"], 2)))
+        if a:
+            out.append((f"final_loss_async_{mname}", a["final_loss"]))
+        if c:
+            out.append((f"sim_time_adaptive_{mname}",
+                        c["sim_time_to_target"]))
+            statics = [m[(method, arm)]["sim_time_to_target"]
+                       for arm in ("sync", "async")
+                       if m.get((method, arm))
+                       and m[(method, arm)]["sim_time_to_target"] > 0]
+            if statics and c["sim_time_to_target"] > 0:
+                out.append((f"sim_speedup_vs_best_static_{mname}",
+                            round(min(statics)
+                                  / c["sim_time_to_target"], 2)))
+    return out
+
+
+register(BenchDef(
+    "async",
+    MatrixConfig.make("async",
+                      {"method": ENGINE_BENCH_METHODS,
+                       "arm": ("sync", "async", "controller")},
+                      fixed=dict(model="mlp_cls_reduced", clients=8,
+                                 h_local=6, rounds=30)),
+    _run_async, _sum_async,
+    note="arm axis order matters: the sync arm sets the shared target_loss "
+         "(55% of its round-0 loss) the async and controller arms race to; "
+         "async/controller arms run buffer_rounds*rounds rounds (their "
+         "simulated rounds are ~B x shorter). Partial --select runs without "
+         "arm=sync read the committed sync row's target_loss instead."))
 
 
 # --------------------------------------------------------------------------- #
-# serve — production decode path -> BENCH_serve.json
+# comm — analytic communication volume per round (arch)
 # --------------------------------------------------------------------------- #
 
 
-SERVE_BENCH_ARCHS = ("qwen2-0.5b", "mamba2-1.3b")
-SERVE_BENCH_TRACE = dict(slots=4, n_requests=10, arrival_rate=0.6)
+def _run_comm(point, ctx):
+    from repro.configs import get_config
+    arch = point.coords["arch"]
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    savic_bytes = 2 * 4 * n          # params + momentum all-reduce, fp32
+    ddp_bytes = 4 * n * 8            # grad all-reduce every step, H=8
+    if "dryrun_counted" not in ctx:
+        ctx["dryrun_counted"] = True
+        ddir = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                            "results", "dryrun")
+        if os.path.isdir(ddir):
+            import glob
+            _extra(ctx, dryrun_records_single_pod=len(
+                glob.glob(os.path.join(ddir, "*__16x16.json"))))
+    return [make_row(point.coords,
+                     {"params": n,
+                      "savic_sync_GB_per_round": savic_bytes / 1e9,
+                      "ddp_GB_per_round_H8": ddp_bytes / 1e9,
+                      "saving_x": ddp_bytes / savic_bytes})]
 
 
-def bench_serve(batch=4, prompt_len=32, gen_len=16, seed=0):
-    """The serving decode path (launch/serve.py, DESIGN.md §8) on reduced
-    configs: prefill-cache reuse vs prompt replay (TTFT + phase-separated
-    timings), steady-state decode tok/s with p50/p99 per-token latency, and
-    continuous vs static batching on the SAME Poisson arrival trace (makespan
-    and throughput in decode-step clock units — the scheduling comparison —
-    with compute wall seconds reported alongside, honestly: on CPU-reduced
-    configs continuous pays more prefill dispatches, so its wall tok/s can
-    trail static even when its trace throughput wins). All arms run with
-    warmup=True, so compile time is excluded. Writes BENCH_serve.json at the
-    repo root."""
-    from repro.launch.serve import (serve, serve_continuous, serve_replay,
-                                    serve_static)
-    kw = dict(reduced=True, batch=batch, prompt_len=prompt_len,
-              gen_len=gen_len, seed=seed, warmup=True, verbose=False)
-    tkw = dict(reduced=True, prompt_len=8, gen_len=gen_len, seed=seed,
-               warmup=True, verbose=False, **SERVE_BENCH_TRACE)
-    rows, out, entries = [], [], {}
-    for arch in SERVE_BENCH_ARCHS:
-        reuse = serve(arch, **kw)
-        replay = serve_replay(arch, **kw)
-        assert np.array_equal(reuse.tokens, replay.tokens)   # same greedy ids
-        cont = serve_continuous(arch, **tkw)
-        stat = serve_static(arch, **tkw)
-        rec = {}
-        for mode, r in (("reuse", reuse), ("replay", replay)):
-            rec[mode] = dict(r.timings)
-            rec[mode]["p50_token_s"] = float(np.percentile(r.per_token_s, 50))
-            rec[mode]["p99_token_s"] = float(np.percentile(r.per_token_s, 99))
-            rows.append({"arch": arch, "mode": mode, **rec[mode]})
-        for r in (cont, stat):
-            m = r.metrics
-            rec[m["mode"]] = {k: v for k, v in m.items()
-                              if k != "jit_cache_sizes"}
-            rec[m["mode"]]["jit_cache_step"] = m["jit_cache_sizes"]["step"]
-            rows.append({"arch": arch, "mode": m["mode"],
-                         "ttft_s": "", "tok_per_s": m["wall_tok_per_s"],
-                         "p50_token_s": m["p50_step_s"],
-                         "p99_token_s": m["p99_step_s"],
-                         "makespan_steps": m["makespan_steps"],
-                         "tok_per_step": m["tok_per_step"],
-                         "mean_queue_delay_steps":
-                             m["mean_queue_delay_steps"]})
-        entries[arch] = rec
-        a = arch.replace("-", "_").replace(".", "_")
-        out.append(("serve", f"ttft_speedup_reuse_{a}",
-                    round(replay.timings["ttft_s"]
-                          / max(reuse.timings["ttft_s"], 1e-9), 2)))
-        out.append(("serve", f"decode_tok_per_s_{a}",
-                    round(reuse.timings["tok_per_s"], 1)))
-        out.append(("serve", f"trace_throughput_x_continuous_{a}",
-                    round(cont.metrics["tok_per_step"]
-                          / max(stat.metrics["tok_per_step"], 1e-9), 2)))
-    path_json = _dump_json("BENCH_serve.json", {"bench": "serve_decode_path",
-                   "config": {"reduced": True, "batch": batch,
-                              "prompt_len": prompt_len, "gen_len": gen_len,
-                              "trace": {**SERVE_BENCH_TRACE,
-                                        "prompt_len": 8, "gen_len": gen_len,
-                                        "clock": "decode-step units; "
-                                                 "prefill=0 steps"},
-                              "warmup": True, "greedy": True,
-                              "backend": jax.default_backend()},
-                   "archs": entries})
-    return out, _emit(rows, "serve")
+def _sum_comm(doc):
+    out = [("mean_saving_x",
+            round(float(np.mean([r["metrics"]["saving_x"]
+                                 for r in doc["rows"]])), 1))]
+    n_rec = doc["config"].get("dryrun_records_single_pod")
+    if n_rec is not None:
+        out.append(("dryrun_records_single_pod", n_rec))
+    return out
 
 
-# --------------------------------------------------------------------------- #
-# comm — communication volume per round
-# --------------------------------------------------------------------------- #
-
-
-def bench_comm():
-    from repro.configs import ARCH_IDS, get_config
-    rows, out = [], []
-    for arch in ARCH_IDS:
-        cfg = get_config(arch)
-        n = cfg.param_count()
-        savic_bytes = 2 * 4 * n          # params + momentum all-reduce, fp32
-        ddp_bytes = 4 * n * 8            # grad all-reduce every step, H=8
-        rows.append({"arch": arch, "params": n,
-                     "savic_sync_GB_per_round": savic_bytes / 1e9,
-                     "ddp_GB_per_round_H8": ddp_bytes / 1e9,
-                     "saving_x": ddp_bytes / savic_bytes})
-    out.append(("comm", "mean_saving_x",
-                round(float(np.mean([r["saving_x"] for r in rows])), 1)))
-    ddir = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
-    if os.path.isdir(ddir):
-        import glob
-        n_rec = len(glob.glob(os.path.join(ddir, "*__16x16.json")))
-        out.append(("comm", "dryrun_records_single_pod", n_rec))
-    return out, _emit(rows, "comm")
+try:
+    from repro.configs import ARCH_IDS as _ARCH_IDS
+except Exception:                    # repro not importable (no PYTHONPATH=src)
+    _ARCH_IDS = ()
+if _ARCH_IDS:
+    register(BenchDef(
+        "comm",
+        MatrixConfig.make("comm", {"arch": tuple(_ARCH_IDS)},
+                          fixed=dict(h_local=8, dtype="fp32")),
+        _run_comm, _sum_comm))
 
 
 # --------------------------------------------------------------------------- #
@@ -825,43 +853,61 @@ def bench_comm():
 # --------------------------------------------------------------------------- #
 
 
-def _time(f, *args, n=5):
-    r = f(*args)
-    jax.block_until_ready(r)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        r = f(*args)
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / n * 1e6
+KERNELS_MICRO = ("scaled_update_1M", "flash_attn_512", "ssd_256")
 
 
-def bench_fused_sharded():
-    """Sharded rows for BENCH_kernels.json (DESIGN.md §7): per-step collective
-    bytes of the shard-mapped fused local step on model-/FSDP-/mixed-sharded
-    plans, vs the naive global flat view's resharding blowup and the tree
-    path's zero baseline.  Runs benchmarks/sharded_collectives.py in a
-    subprocess (the worker forces 8 host devices; this process keeps 1)."""
-    import subprocess
-    import sys
-    worker = os.path.join(os.path.dirname(__file__), "sharded_collectives.py")
-    r = subprocess.run([sys.executable, worker], capture_output=True,
-                       text=True, timeout=560)
-    if r.returncode != 0:
-        raise RuntimeError(f"sharded_collectives worker failed:\n{r.stderr}")
-    rec = json.loads(r.stdout.strip().splitlines()[-1])
-    rows, out = [], []
-    for plan, pr in rec["plans"].items():
-        rows.append({
-            "plan": plan, "n_shards": pr["n_shards"],
-            "collective_bytes_sharded": pr["sharded"]["collective_bytes"],
-            "collective_bytes_naive": pr["naive"]["collective_bytes"],
-            "collective_bytes_tree": pr["tree"]["collective_bytes"],
-        })
-        out.append(("kernels", f"sharded_step_collective_bytes_{plan}",
-                    pr["sharded"]["collective_bytes"]))
-        out.append(("kernels", f"naive_flat_collective_bytes_{plan}",
-                    pr["naive"]["collective_bytes"]))
-    return out, rows, rec
+def _run_kernels(point, ctx):
+    from repro.kernels import ops, ref
+    name = point.coords["kernel"]
+    k = jax.random.key(0)
+    if name == "scaled_update_1M":
+        n = 1 << 20
+        p, m, g = (jax.random.normal(jax.random.fold_in(k, i), (n,))
+                   for i in range(3))
+        d = jax.random.uniform(jax.random.fold_in(k, 3), (n,), minval=0.1,
+                               maxval=2.0)
+        kw = dict(gamma=0.1, beta1=0.9, alpha=1e-3)
+        us_k = _time(lambda: ops.scaled_update(p, m, g, d, **kw))
+        us_r = _time(jax.jit(lambda p, m, g, d: ref.scaled_update_ref(
+            p, m, g, d, **kw)), p, m, g, d)
+    elif name == "flash_attn_512":
+        B, S, H, D = 1, 512, 4, 64
+        q, kk, v = (jax.random.normal(jax.random.fold_in(k, 10 + i),
+                                      (B, S, H, D)) for i in range(3))
+        us_k = _time(lambda: ops.flash_attention(q, kk, v, bq=128, bk=128))
+        us_r = _time(jax.jit(lambda q, kk, v: ref.attention_ref(
+            q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))), q, kk, v)
+    else:  # ssd_256
+        B, S, H, P, N = 1, 256, 4, 32, 16
+        xh = jax.random.normal(jax.random.fold_in(k, 20), (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 21),
+                                               (B, S, H)))
+        A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 22), (H,)))
+        Bm = jax.random.normal(jax.random.fold_in(k, 23), (B, S, H, N))
+        Cm = jax.random.normal(jax.random.fold_in(k, 24), (B, S, H, N))
+        us_k = _time(lambda: ops.ssd(xh, dt, A, Bm, Cm, chunk=64))
+        us_r = _time(jax.jit(lambda *a: ref.ssd_ref(*a)), xh, dt, A, Bm, Cm)
+    _extra(ctx, backend=jax.default_backend())
+    return [make_row(point.coords, {"us_interpret": us_k, "us_ref_jit": us_r})]
+
+
+def _sum_kernels(doc):
+    return [(f"{r['coords']['kernel']}_us", round(r["metrics"]["us_interpret"]))
+            for r in doc["rows"]]
+
+
+register(BenchDef(
+    "kernels",
+    MatrixConfig.make("kernels", {"kernel": KERNELS_MICRO}),
+    _run_kernels, _sum_kernels,
+    note="interpret-mode Pallas timings vs jnp references on CPU: "
+         "correctness-path timing, NOT TPU perf"))
+
+
+# --------------------------------------------------------------------------- #
+# kernels_fused — HBM bytes, fused flat-buffer step vs pre-PR per-leaf path
+# --------------------------------------------------------------------------- #
 
 
 FUSED_BENCH_M = 8
@@ -877,34 +923,21 @@ FUSED_BENCH_CASES = (
 )
 
 
-def bench_fused_step():
-    """HBM bytes on the client local step, fused flat-buffer kernel vs the
-    pre-PR per-leaf kernel path — per PrecondConfig kind -> BENCH_kernels.json.
-
-    Both arms are measured with ``xla_cost_properties`` ("bytes accessed") on
-    compiled programs, summed PER LAUNCH, because HBM round-trips happen at
-    launch boundaries:
-
-      * pre-PR path — what ``use_fused_kernel`` emitted before the flat-buffer
-        refactor: an XLA momentum pass, ONE ``scaled_update`` launch PER LEAF
-        (whose contract includes a zeros operand and a dead momentum write),
-        and — when D advances every step — a separate D̂ EMA pass with its own
-        HBM round-trip.  6+ reads / 4 writes per element across 3 launches.
-      * fused path — the ``fused_step_flat`` kernel contract: ONE launch over
-        the per-client flat buffer, 4–5 reads / 2–3 writes per element.  On
-        CPU the Mosaic kernel cannot compile, so the measured program is the
-        kernel's jnp oracle (``ref.fused_step_ref``) in one jit — XLA emits a
-        single fusion whose traffic IS the kernel's operand/result contract;
-        tests/test_fused_step.py pins the kernel to that oracle.
-
-    Wall-times: the oracle fusions (both arms; TPU-shaped traffic) plus the
-    interpret-mode Pallas kernel (correctness-path timing, NOT TPU perf).
-    """
-    from repro.core import preconditioner as PC
-    from repro.kernels import ops, ref
-    from repro.utils.flatten import FlatLayout
+def _bytes_accessed(fn, *args):
     from repro.utils.hlo_cost import xla_cost_properties
+    c = jax.jit(fn).lower(*args).compile()
+    cost = xla_cost_properties(c)
+    if "bytes accessed" not in cost:
+        # fail loudly: a silent 0 would fabricate the reduction ratio
+        raise RuntimeError("cost_analysis() has no 'bytes accessed' on "
+                           f"this backend; keys: {sorted(cost)}")
+    return float(cost["bytes accessed"]), c
 
+
+def _fused_env(ctx):
+    if "fused_env" in ctx:
+        return ctx["fused_env"]
+    from repro.utils.flatten import FlatLayout
     M = FUSED_BENCH_M
     k = jax.random.key(7)
     tree = lambda i0: {name: jax.random.normal(jax.random.fold_in(k, i0 + i),
@@ -916,229 +949,307 @@ def bench_fused_step():
     h_t = tree(40)
     layout = FlatLayout.for_tree(p_t, batch_dims=1)
     P, Mo, G = (layout.flatten(x, batch_dims=1) for x in (p_t, m_t, g_t))
-    D, Hs = layout.flatten(d_t, batch_dims=1), layout.flatten(h_t, batch_dims=1)
-    t_m = jnp.zeros((M,), jnp.int32)
+    D = layout.flatten(d_t, batch_dims=1)
+    Hs = layout.flatten(h_t, batch_dims=1)
+    ctx["fused_env"] = dict(p_t=p_t, m_t=m_t, g_t=g_t, d_t=d_t, h_t=h_t,
+                            P=P, Mo=Mo, G=G, D=D, Hs=Hs,
+                            t_m=jnp.zeros((M,), jnp.int32))
+    _extra(ctx, clients=M,
+           leaves={nm: list(s) for nm, s in FUSED_BENCH_SHAPES.items()},
+           n_total_per_client=layout.n_total,
+           backend=jax.default_backend())
+    return ctx["fused_env"]
 
-    def _bytes(fn, *args):
-        c = jax.jit(fn).lower(*args).compile()
-        cost = xla_cost_properties(c)
-        if "bytes accessed" not in cost:
-            # fail loudly: a silent 0 would fabricate the reduction ratio
-            raise RuntimeError("cost_analysis() has no 'bytes accessed' on "
-                               f"this backend; keys: {sorted(cost)}")
-        return float(cost["bytes accessed"]), c
 
-    rows, out, entries = [], [], {}
-    for tag, kind, local, hutch in FUSED_BENCH_CASES:
-        pc = PC.PrecondConfig(kind=kind, alpha=1e-2)
-        squared = pc.rule == "squared"
+def _run_fused(point, ctx):
+    """One (tag, kind, local-D, hutchinson) case of the fused-step HBM
+    comparison.  Both arms are measured with ``xla_cost_properties`` ("bytes
+    accessed") on compiled programs, summed PER LAUNCH, because HBM
+    round-trips happen at launch boundaries (full methodology in the bench
+    note / DESIGN.md §7)."""
+    from repro.core import preconditioner as PC
+    from repro.kernels import ops, ref
 
-        # ---- pre-PR per-leaf kernel path ------------------------------------
-        # Verbatim launch structure of the old fused path: an XLA momentum
-        # pass, then PER LEAF (flattened to (M·n_leaf,)) a pad launch to the
-        # fixed BLOCK = 8·128·16 (the old kernel padded every ragged leaf all
-        # the way up — custom-call operands materialize, so the pad copies
-        # are real HBM traffic), the kernel launch (zeros in the momentum
-        # slot, beta1 pre-applied, dead m output — see ops.scaled_update_tree)
-        # and the [:n] slice launch back.
-        OLD_BLOCK = 8 * 128 * 16
+    env = _fused_env(ctx)
+    p_t, m_t, g_t, d_t, h_t = (env[n] for n in
+                               ("p_t", "m_t", "g_t", "d_t", "h_t"))
+    P, Mo, G, D, Hs, t_m = (env[n] for n in ("P", "Mo", "G", "D", "Hs", "t_m"))
+    tag = point.coords["case"]
+    _, kind, local, hutch = next(c for c in FUSED_BENCH_CASES
+                                 if c[0] == tag)
+    M = FUSED_BENCH_M
+    pc = PC.PrecondConfig(kind=kind, alpha=1e-2)
+    squared = pc.rule == "squared"
 
-        def mom_pass(m, g):
-            return jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+    # ---- pre-PR per-leaf kernel path ------------------------------------
+    # Verbatim launch structure of the old fused path: an XLA momentum
+    # pass, then PER LEAF (flattened to (M·n_leaf,)) a pad launch to the
+    # fixed BLOCK = 8·128·16 (the old kernel padded every ragged leaf all
+    # the way up — custom-call operands materialize, so the pad copies
+    # are real HBM traffic), the kernel launch (zeros in the momentum
+    # slot, beta1 pre-applied, dead m output — see ops.scaled_update_tree)
+    # and the [:n] slice launch back.
+    OLD_BLOCK = 8 * 128 * 16
 
-        by_mom, c_mom = _bytes(mom_pass, m_t, g_t)
-        by_leaf = 0.0
-        c_leaf = []
-        for name in FUSED_BENCH_SHAPES:
-            n_leaf = int(np.prod(FUSED_BENCH_SHAPES[name])) * M
-            npad = (OLD_BLOCK - n_leaf % OLD_BLOCK) % OLD_BLOCK
-            flat = lambda x: x.reshape(-1)
-            args = (flat(p_t[name]), jnp.zeros((n_leaf,), jnp.float32),
-                    flat(m_t[name]), flat(d_t[name]))
-            launches = []
-            if npad:
-                def pad_fn(p, z, m, d, _npad=npad):
-                    pad = lambda x, v: jnp.concatenate(
-                        [x, jnp.full((_npad,), v, x.dtype)])
-                    return pad(p, 0), pad(z, 0), pad(m, 0), pad(d, 1.0)
-                b, c = _bytes(pad_fn, *args)
-                by_leaf += b
-                launches.append((c, args))
-                args = tuple(np.asarray(a) for a in c(*args))
-                args = tuple(jnp.asarray(a) for a in args)
+    def mom_pass(m, g):
+        return jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
 
-            def leaf_fn(p, z, m, d):
-                return ref.scaled_update_ref(p, z, m, d, gamma=0.01,
-                                             beta1=0.0, alpha=1e-2,
-                                             squared=squared)
-            b, c = _bytes(leaf_fn, *args)
+    by_mom, c_mom = _bytes_accessed(mom_pass, m_t, g_t)
+    by_leaf = 0.0
+    c_leaf = []
+    for name in FUSED_BENCH_SHAPES:
+        n_leaf = int(np.prod(FUSED_BENCH_SHAPES[name])) * M
+        npad = (OLD_BLOCK - n_leaf % OLD_BLOCK) % OLD_BLOCK
+        flat = lambda x: x.reshape(-1)
+        args = (flat(p_t[name]), jnp.zeros((n_leaf,), jnp.float32),
+                flat(m_t[name]), flat(d_t[name]))
+        launches = []
+        if npad:
+            def pad_fn(p, z, m, d, _npad=npad):
+                pad = lambda x, v: jnp.concatenate(
+                    [x, jnp.full((_npad,), v, x.dtype)])
+                return pad(p, 0), pad(z, 0), pad(m, 0), pad(d, 1.0)
+            b, c = _bytes_accessed(pad_fn, *args)
             by_leaf += b
             launches.append((c, args))
-            if npad:
-                outs = tuple(jnp.asarray(np.asarray(o)) for o in c(*args))
+            args = tuple(np.asarray(a) for a in c(*args))
+            args = tuple(jnp.asarray(a) for a in args)
 
-                def slice_fn(po, mo, _n=n_leaf):
-                    return po[:_n], mo[:_n]
-                b, c = _bytes(slice_fn, *outs)
-                by_leaf += b
-                launches.append((c, outs))
-            c_leaf.append(launches)
-        by_dpass = 0.0
-        c_dpass = None
-        if local:
-            def d_pass(d, g, h, t):
-                b = PC.beta_t(pc, t)
-                stat = h if hutch else jax.tree.map(lambda x: x ** 2, g)
-                if kind == "adagrad":
-                    return jax.tree.map(lambda dd, hh: dd + hh, d, stat)
-                return jax.tree.map(lambda dd, hh: b * dd + (1.0 - b) * hh,
-                                    d, stat)
-            by_dpass, c_dpass = _bytes(d_pass, d_t, g_t, h_t, jnp.int32(0))
-        bytes_prepr = by_mom + by_leaf + by_dpass
+        def leaf_fn(p, z, m, d):
+            return ref.scaled_update_ref(p, z, m, d, gamma=0.01,
+                                         beta1=0.0, alpha=1e-2,
+                                         squared=squared)
+        b, c = _bytes_accessed(leaf_fn, *args)
+        by_leaf += b
+        launches.append((c, args))
+        if npad:
+            outs = tuple(jnp.asarray(np.asarray(o)) for o in c(*args))
 
-        # ---- fused flat-buffer kernel contract (one launch) ----------------
-        kw = dict(gamma=0.01, beta1=0.9, alpha=1e-2, beta2=pc.beta2,
-                  kind=kind, clip="max", schedule=pc.schedule, update_d=local)
-        hstat = Hs if (local and hutch) else None
-        d_arg = D if local else D[0]
-        bytes_fused, c_fused = _bytes(
-            lambda *a: ref.fused_step_ref(*a, **kw), P, Mo, G, d_arg, hstat,
-            t_m, None)
+            def slice_fn(po, mo, _n=n_leaf):
+                return po[:_n], mo[:_n]
+            b, c = _bytes_accessed(slice_fn, *outs)
+            by_leaf += b
+            launches.append((c, outs))
+        c_leaf.append(launches)
+    by_dpass = 0.0
+    c_dpass = None
+    if local:
+        def d_pass(d, g, h, t):
+            b = PC.beta_t(pc, t)
+            stat = h if hutch else jax.tree.map(lambda x: x ** 2, g)
+            if kind == "adagrad":
+                return jax.tree.map(lambda dd, hh: dd + hh, d, stat)
+            return jax.tree.map(lambda dd, hh: b * dd + (1.0 - b) * hh,
+                                d, stat)
+        by_dpass, c_dpass = _bytes_accessed(d_pass, d_t, g_t, h_t,
+                                            jnp.int32(0))
+    bytes_prepr = by_mom + by_leaf + by_dpass
 
-        ratio = bytes_prepr / max(bytes_fused, 1.0)
-        us_prepr = _time(lambda: [c_mom(m_t, g_t)]
-                         + [c(*a) for launches in c_leaf
-                            for c, a in launches]
-                         + ([c_dpass(d_t, g_t, h_t, jnp.int32(0))]
-                            if c_dpass else []))
-        us_oracle = _time(lambda: c_fused(P, Mo, G, d_arg, hstat, t_m, None))
-        us_interp = _time(lambda: ops.fused_local_step(
-            P, Mo, G, d_arg, hstat, t_m, None, **kw))
-        rec = {
-            "bytes_prepr_path": bytes_prepr,
-            "bytes_fused": bytes_fused,
-            "hbm_reduction_x": round(ratio, 2),
-            "launches_prepr": 1 + sum(len(l) for l in c_leaf) + (1 if local
-                                                                 else 0),
-            "launches_fused": 1,
-            "us_prepr_oracle": round(us_prepr, 1),
-            "us_fused_oracle": round(us_oracle, 1),
-            "us_fused_interpret": round(us_interp, 1),
-        }
-        entries[tag] = rec
-        rows.append({"case": tag, **rec})
-        out.append(("kernels", f"hbm_reduction_x_{tag}", rec["hbm_reduction_x"]))
+    # ---- fused flat-buffer kernel contract (one launch) ----------------
+    kw = dict(gamma=0.01, beta1=0.9, alpha=1e-2, beta2=pc.beta2,
+              kind=kind, clip="max", schedule=pc.schedule, update_d=local)
+    hstat = Hs if (local and hutch) else None
+    d_arg = D if local else D[0]
+    bytes_fused, c_fused = _bytes_accessed(
+        lambda *a: ref.fused_step_ref(*a, **kw), P, Mo, G, d_arg, hstat,
+        t_m, None)
 
-    # sharded rows (DESIGN.md §7): per-step collective bytes of the
-    # shard-mapped path must be ~0 vs the naive flat view's reshard blowup
-    sh_out, sh_rows, sh_rec = bench_fused_sharded()
-    out.extend(sh_out)
-    _emit(sh_rows, "kernels_sharded")
-
-    path_json = _dump_json("BENCH_kernels.json", {
-            "bench": "fused_local_step_hbm_bytes",
-            "config": {
-                "clients": FUSED_BENCH_M,
-                "leaves": {nm: list(s) for nm, s in
-                           FUSED_BENCH_SHAPES.items()},
-                "n_total_per_client": FlatLayout.for_tree(
-                    {n_: jax.ShapeDtypeStruct(s, jnp.float32) for n_, s in
-                     FUSED_BENCH_SHAPES.items()}).n_total,
-                "backend": jax.default_backend(),
-                "measurement": "xla_cost_properties('bytes accessed'), "
-                               "summed per launch (HBM round-trips happen at "
-                               "launch boundaries). pre-PR arm = the verbatim "
-                               "old launch structure: momentum pass + per-"
-                               "leaf pad-to-BLOCK / kernel-contract / slice "
-                               "launches + separate D-EMA pass. fused arm = "
-                               "the fused_step_flat kernel's jnp-oracle "
-                               "contract in one jit (kernel pinned to it in "
-                               "tests/test_fused_step.py); interpret-mode "
-                               "timing is correctness-path, not TPU perf",
-            },
-            "cases": entries,
-            "sharded": {
-                "config": {
-                    "n_devices": sh_rec["n_devices"],
-                    "clients": sh_rec["clients"],
-                    "leaves": sh_rec["leaves"],
-                    "measurement": "ONE local step of the flat pipeline "
-                                   "(flatten -> fused kernel -> unflatten) "
-                                   "lowered per plan on a (2,4)=('data',"
-                                   "'model') 8-host-device mesh; collective "
-                                   "bytes parsed from optimized HLO (utils/"
-                                   "hlo.collective_bytes — cost_analysis() "
-                                   "has no collective key on this backend), "
-                                   "'bytes accessed' from "
-                                   "xla_cost_properties. sharded arm runs "
-                                   "inside shard_map (must be 0 collective "
-                                   "bytes: nothing touches the flat "
-                                   "buffers); naive arm is the single "
-                                   "global flat view the pre-PR launch gate "
-                                   "guarded against (GSPMD reshards the "
-                                   "whole client state per step); tree arm "
-                                   "is the old fallback baseline. The "
-                                   "sharded arm's bytes_accessed includes "
-                                   "the flatten/unflatten boundary copies "
-                                   "that the real engine pays once per "
-                                   "round, not per step (the flat carry "
-                                   "rides through the scan).",
-                },
-                "plans": sh_rec["plans"],
-            }})
-    return out, rows
+    ratio = bytes_prepr / max(bytes_fused, 1.0)
+    us_prepr = _time(lambda: [c_mom(m_t, g_t)]
+                     + [c(*a) for launches in c_leaf
+                        for c, a in launches]
+                     + ([c_dpass(d_t, g_t, h_t, jnp.int32(0))]
+                        if c_dpass else []))
+    us_oracle = _time(lambda: c_fused(P, Mo, G, d_arg, hstat, t_m, None))
+    us_interp = _time(lambda: ops.fused_local_step(
+        P, Mo, G, d_arg, hstat, t_m, None, **kw))
+    rec = {
+        "bytes_prepr_path": bytes_prepr,
+        "bytes_fused": bytes_fused,
+        "hbm_reduction_x": round(ratio, 2),
+        "launches_prepr": 1 + sum(len(l) for l in c_leaf) + (1 if local
+                                                             else 0),
+        "launches_fused": 1,
+        "us_prepr_oracle": round(us_prepr, 1),
+        "us_fused_oracle": round(us_oracle, 1),
+        "us_fused_interpret": round(us_interp, 1),
+    }
+    return [make_row(point.coords, rec)]
 
 
-def bench_kernels():
-    from repro.kernels import ops, ref
-    rows, out = [], []
-    k = jax.random.key(0)
-    n = 1 << 20
-    p, m, g = (jax.random.normal(jax.random.fold_in(k, i), (n,))
-               for i in range(3))
-    d = jax.random.uniform(jax.random.fold_in(k, 3), (n,), minval=0.1,
-                           maxval=2.0)
-    kw = dict(gamma=0.1, beta1=0.9, alpha=1e-3)
-    us_k = _time(lambda: ops.scaled_update(p, m, g, d, **kw))
-    us_r = _time(jax.jit(lambda p, m, g, d: ref.scaled_update_ref(
-        p, m, g, d, **kw)), p, m, g, d)
-    rows.append({"kernel": "scaled_update_1M", "us_interpret": us_k,
-                 "us_ref_jit": us_r})
+def _sum_fused(doc):
+    return [(f"hbm_reduction_x_{r['coords']['case']}",
+             r["metrics"]["hbm_reduction_x"]) for r in doc["rows"]]
 
-    B, S, H, D = 1, 512, 4, 64
-    q, kk, v = (jax.random.normal(jax.random.fold_in(k, 10 + i), (B, S, H, D))
-                for i in range(3))
-    us_k = _time(lambda: ops.flash_attention(q, kk, v, bq=128, bk=128))
-    us_r = _time(jax.jit(lambda q, kk, v: ref.attention_ref(
-        q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
-        v.transpose(0, 2, 1, 3))), q, kk, v)
-    rows.append({"kernel": "flash_attn_512", "us_interpret": us_k,
-                 "us_ref_jit": us_r})
 
-    B, S, H, P, N = 1, 256, 4, 32, 16
-    xh = jax.random.normal(jax.random.fold_in(k, 20), (B, S, H, P))
-    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 21),
-                                           (B, S, H)))
-    A = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 22), (H,)))
-    Bm = jax.random.normal(jax.random.fold_in(k, 23), (B, S, H, N))
-    Cm = jax.random.normal(jax.random.fold_in(k, 24), (B, S, H, N))
-    us_k = _time(lambda: ops.ssd(xh, dt, A, Bm, Cm, chunk=64))
-    us_r = _time(jax.jit(lambda *a: ref.ssd_ref(*a)), xh, dt, A, Bm, Cm)
-    rows.append({"kernel": "ssd_256", "us_interpret": us_k,
-                 "us_ref_jit": us_r})
-    for r in rows:
-        out.append(("kernels", r["kernel"] + "_us", round(r["us_interpret"])))
-    # fused flat-buffer local step: HBM bytes fused vs pre-PR per-leaf path
-    # (per PrecondConfig kind; writes BENCH_kernels.json at the repo root)
-    f_out, f_rows = bench_fused_step()
-    out.extend(f_out)
-    _emit(f_rows, "kernels_fused")
-    return out, _emit(rows, "kernels")
+register(BenchDef(
+    "kernels_fused",
+    MatrixConfig.make("kernels_fused",
+                      {"case": tuple(c[0] for c in FUSED_BENCH_CASES)}),
+    _run_fused, _sum_fused,
+    note="xla_cost_properties('bytes accessed'), summed per launch (HBM "
+         "round-trips happen at launch boundaries). pre-PR arm = the "
+         "verbatim old launch structure: momentum pass + per-leaf "
+         "pad-to-BLOCK / kernel-contract / slice launches + separate D-EMA "
+         "pass. fused arm = the fused_step_flat kernel's jnp-oracle "
+         "contract in one jit (kernel pinned to it in "
+         "tests/test_fused_step.py); interpret-mode timing is "
+         "correctness-path, not TPU perf"))
 
 
 # --------------------------------------------------------------------------- #
-# train_lm — federated LM rounds through the production driver
-#            -> BENCH_train_lm.json
+# kernels_sharded — shard-mapped fused-step collective bytes (plan)
+# --------------------------------------------------------------------------- #
+
+
+SHARDED_PLANS = ("model", "fsdp", "mixed")
+
+
+def _run_kernels_sharded(point, ctx):
+    """Per-step collective bytes of the shard-mapped fused local step
+    (DESIGN.md §7) vs the naive global flat view and the tree baseline.
+    Runs benchmarks/sharded_collectives.py once in a subprocess (the worker
+    forces 8 host devices; this process keeps 1); per-plan rows come from
+    that one record."""
+    if "sharded_rec" not in ctx:
+        import subprocess
+        worker = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "sharded_collectives.py")
+        r = subprocess.run([sys.executable, worker], capture_output=True,
+                           text=True, timeout=560)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"sharded_collectives worker failed:\n{r.stderr}")
+        ctx["sharded_rec"] = json.loads(r.stdout.strip().splitlines()[-1])
+        rec = ctx["sharded_rec"]
+        _extra(ctx, n_devices=rec["n_devices"], clients=rec["clients"],
+               leaves=rec["leaves"])
+    pr = ctx["sharded_rec"]["plans"][point.coords["plan"]]
+    return [make_row(point.coords,
+                     {"n_shards": pr["n_shards"],
+                      "collective_bytes_sharded":
+                          pr["sharded"]["collective_bytes"],
+                      "collective_bytes_naive":
+                          pr["naive"]["collective_bytes"],
+                      "collective_bytes_tree":
+                          pr["tree"]["collective_bytes"]})]
+
+
+def _sum_sharded(doc):
+    out = []
+    for r in doc["rows"]:
+        plan = r["coords"]["plan"]
+        out.append((f"sharded_step_collective_bytes_{plan}",
+                    r["metrics"]["collective_bytes_sharded"]))
+        out.append((f"naive_flat_collective_bytes_{plan}",
+                    r["metrics"]["collective_bytes_naive"]))
+    return out
+
+
+register(BenchDef(
+    "kernels_sharded",
+    MatrixConfig.make("kernels_sharded", {"plan": SHARDED_PLANS}),
+    _run_kernels_sharded, _sum_sharded,
+    note="ONE local step of the flat pipeline (flatten -> fused kernel -> "
+         "unflatten) lowered per plan on a (2,4)=('data','model') "
+         "8-host-device mesh; collective bytes parsed from optimized HLO "
+         "(utils/hlo.collective_bytes), 'bytes accessed' from "
+         "xla_cost_properties. sharded arm runs inside shard_map (must be "
+         "0 collective bytes); naive arm is the single global flat view "
+         "the pre-PR launch gate guarded against; tree arm is the old "
+         "fallback baseline."))
+
+
+# --------------------------------------------------------------------------- #
+# serve — production decode path (arch × mode)
+# --------------------------------------------------------------------------- #
+
+
+SERVE_BENCH_ARCHS = ("qwen2-0.5b", "mamba2-1.3b")
+SERVE_BENCH_MODES = ("reuse", "replay", "continuous", "static")
+SERVE_BENCH_TRACE = dict(slots=4, n_requests=10, arrival_rate=0.6)
+
+
+def _serve_arch(ctx, arch, fixed, seed):
+    """All four serve modes for one arch, computed once per run (reuse and
+    replay must decode the same greedy ids; continuous and static share one
+    Poisson arrival trace)."""
+    cache = ctx.setdefault("serve_recs", {})
+    if arch in cache:
+        return cache[arch]
+    from repro.launch.serve import (serve, serve_continuous, serve_replay,
+                                    serve_static)
+    kw = dict(reduced=True, batch=fixed["batch"],
+              prompt_len=fixed["prompt_len"], gen_len=fixed["gen_len"],
+              seed=seed, warmup=True, verbose=False)
+    tkw = dict(reduced=True, prompt_len=8, gen_len=fixed["gen_len"],
+               seed=seed, warmup=True, verbose=False, **SERVE_BENCH_TRACE)
+    reuse = serve(arch, **kw)
+    replay = serve_replay(arch, **kw)
+    assert np.array_equal(reuse.tokens, replay.tokens)   # same greedy ids
+    cont = serve_continuous(arch, **tkw)
+    stat = serve_static(arch, **tkw)
+    rec = {}
+    for mode, r in (("reuse", reuse), ("replay", replay)):
+        rec[mode] = dict(r.timings)
+        rec[mode]["p50_token_s"] = float(np.percentile(r.per_token_s, 50))
+        rec[mode]["p99_token_s"] = float(np.percentile(r.per_token_s, 99))
+    for r in (cont, stat):
+        m = r.metrics
+        rec[m["mode"]] = {k: v for k, v in m.items()
+                          if k not in ("mode", "jit_cache_sizes")}
+        rec[m["mode"]]["jit_cache_step"] = m["jit_cache_sizes"]["step"]
+    cache[arch] = rec
+    _extra(ctx,
+           trace={**SERVE_BENCH_TRACE, "prompt_len": 8,
+                  "gen_len": fixed["gen_len"],
+                  "clock": "decode-step units; prefill=0 steps"},
+           warmup=True, greedy=True, backend=jax.default_backend())
+    return rec
+
+
+def _run_serve(point, ctx):
+    recs = _serve_arch(ctx, point.coords["arch"], point.fixed, point.seed)
+    return [make_row(point.coords, recs[point.coords["mode"]])]
+
+
+def _sum_serve(doc):
+    m = {(r["coords"]["arch"], r["coords"]["mode"]): r["metrics"]
+         for r in doc["rows"]}
+    out = []
+    for arch in _uniq(doc, "arch"):
+        a = arch.replace("-", "_").replace(".", "_")
+        reuse, replay = m.get((arch, "reuse")), m.get((arch, "replay"))
+        cont, stat = m.get((arch, "continuous")), m.get((arch, "static"))
+        if reuse and replay:
+            out.append((f"ttft_speedup_reuse_{a}",
+                        round(replay["ttft_s"]
+                              / max(reuse["ttft_s"], 1e-9), 2)))
+            out.append((f"decode_tok_per_s_{a}",
+                        round(reuse["tok_per_s"], 1)))
+        if cont and stat:
+            out.append((f"trace_throughput_x_continuous_{a}",
+                        round(cont["tok_per_step"]
+                              / max(stat["tok_per_step"], 1e-9), 2)))
+    return out
+
+
+register(BenchDef(
+    "serve",
+    MatrixConfig.make("serve",
+                      {"arch": SERVE_BENCH_ARCHS, "mode": SERVE_BENCH_MODES},
+                      fixed=dict(reduced=True, batch=4, prompt_len=32,
+                                 gen_len=16)),
+    _run_serve, _sum_serve,
+    note="all arms warmup=True (compile excluded); continuous vs static "
+         "compare on the same Poisson trace in decode-step clock units — "
+         "on CPU-reduced configs continuous pays more prefill dispatches, "
+         "so its wall tok/s can trail static even when its trace "
+         "throughput wins"))
+
+
+# --------------------------------------------------------------------------- #
+# train_lm — federated causal-LM rounds through the production driver
 # --------------------------------------------------------------------------- #
 
 
@@ -1163,10 +1274,11 @@ def _train_lm_projection(arch):
     trip-count-corrected per-device numerators of each train artifact."""
     import glob
 
+    from benchmarks.roofline import terms
     from repro.configs import get_shape
-    from roofline import terms
 
-    ddir = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    ddir = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        "results", "dryrun")
     proj = []
     for f in sorted(glob.glob(os.path.join(ddir, f"{arch}__*.json"))):
         rec = json.load(open(f))
@@ -1182,114 +1294,149 @@ def _train_lm_projection(arch):
             "tokens_per_round": tokens,
             "round_s_roofline": round(bound_s, 6),
             "dominant_term": t["dominant"],
-            "tokens_per_s_per_device": round(
+            # deterministic cost-model outputs — named so diff classifies
+            # them as comparable, unlike the wall-derived tokens_per_s_*
+            "tok_s_dev_roofline": round(
                 tokens / rec["n_devices"] / bound_s, 1),
             # compute-term bound for context: the measured-HLO memory term
             # dominates this artifact by ~500×, so the roofline number above
             # is the conservative end of the projection
-            "tokens_per_s_per_device_compute_bound": round(
+            "tok_s_dev_compute_bound": round(
                 tokens / rec["n_devices"] / t["compute_s"], 1),
             "model_flops_utilization": round(t["roofline_frac"], 4),
         })
     return proj
 
 
-def bench_train_lm(rounds=10, H=8, M=4, b=4, seq=64, seed=0):
-    """Real federated causal-LM rounds for every engine method, through the
-    SAME driver that carries mesh launches (repro.launch.train): loss curves
-    on the reduced qwen2-0.5b config (CPU), measured tokens/sec/device, the
-    simulated round time, and the full-shape projection rows. Emits the usual
-    CSV plus BENCH_train_lm.json at the repo root."""
+def _run_train_lm(point, ctx):
     from repro.launch import train as train_mod
-
+    f, seed = point.fixed, point.seed
+    method = point.coords["method"]
+    rounds, H, M = f["rounds"], f["h_local"], f["clients"]
+    b, seq = f["batch"], f["seq"]
     tokens_round = M * H * b * seq
+    argv = ["--arch", TRAIN_LM_ARCH, "--reduced", "--method", method,
+            "--rounds", str(rounds), "--h-local", str(H),
+            "--clients", str(M), "--batch", str(b), "--seq", str(seq),
+            "--seed", str(seed)] + TRAIN_LM_OVERRIDES[method]
+    log = train_mod.main(argv)
+    losses = [l["loss"] for l in log]
+    walls = [l["wall_s"] for l in log]
+    steady = walls[1:] or walls           # round 0 pays the jit compile
+    tps = tokens_round / float(np.mean(steady))
+    half = len(losses) // 2
     n_dev = jax.device_count()
-    rows, out, methods_json = [], [], {}
-    for method in ENGINE_BENCH_METHODS:
-        argv = ["--arch", TRAIN_LM_ARCH, "--reduced", "--method", method,
-                "--rounds", str(rounds), "--h-local", str(H),
-                "--clients", str(M), "--batch", str(b), "--seq", str(seq),
-                "--seed", str(seed)] + TRAIN_LM_OVERRIDES[method]
-        log = train_mod.main(argv)
-        losses = [l["loss"] for l in log]
-        walls = [l["wall_s"] for l in log]
-        steady = walls[1:] or walls           # round 0 pays the jit compile
-        tps = tokens_round / float(np.mean(steady))
-        half = len(losses) // 2
-        rec = {
-            "loss_first": round(losses[0], 4),
-            "loss_last": round(losses[-1], 4),
-            "loss_curve": [round(l, 4) for l in losses],
-            "loss_decreasing_trend": bool(
-                losses[-1] < losses[0]
-                and np.mean(losses[half:]) < np.mean(losses[:half])),
-            "round_wall_s_mean": round(float(np.mean(steady)), 4),
-            "tokens_per_s": round(tps, 1),
-            "tokens_per_s_per_device": round(tps / n_dev, 1),
-            "sim_time_total": log[-1]["sim_time"],
-        }
-        methods_json[method] = rec
-        rows.append({"method": method,
-                     **{k: ("|".join(str(x) for x in v)
-                            if isinstance(v, list) else v)
-                        for k, v in rec.items()}})
-        out.append(("train_lm", f"loss_drop_{method.replace('-', '_')}",
-                    round(losses[0] - losses[-1], 4)))
-        out.append(("train_lm", f"tok_s_dev_{method.replace('-', '_')}",
-                    rec["tokens_per_s_per_device"]))
-    proj = _train_lm_projection(TRAIN_LM_ARCH)
-    for p in proj:
-        rows.append({"method": f"projection:{p['shape']}@{p['mesh']}",
-                     "loss_first": "", "loss_last": "", "loss_curve": "",
-                     "loss_decreasing_trend": "",
-                     "round_wall_s_mean": p["round_s_roofline"],
-                     "tokens_per_s": "",
-                     "tokens_per_s_per_device": p["tokens_per_s_per_device"],
-                     "sim_time_total": ""})
-        out.append(("train_lm", f"tok_s_dev_proj_{p['shape']}",
-                    p["tokens_per_s_per_device"]))
-    path_json = _dump_json("BENCH_train_lm.json", {"bench": "train_lm",
-                   "config": {"arch": f"{TRAIN_LM_ARCH}-reduced",
-                              "clients": M, "h_local": H,
-                              "batch_per_client": b, "seq": seq,
-                              "rounds": rounds, "seed": seed,
-                              "tokens_per_round": tokens_round,
-                              "backend": jax.default_backend(),
-                              "n_devices": n_dev},
-                   "methods": methods_json,
-                   "full_shape_projection": proj})
-    return out, _emit(rows, "train_lm")
+    rec = {
+        "loss_first": round(losses[0], 4),
+        "loss_last": round(losses[-1], 4),
+        "round_wall_s_mean": round(float(np.mean(steady)), 4),
+        "tokens_per_s": round(tps, 1),
+        "tokens_per_s_per_device": round(tps / n_dev, 1),
+        "sim_time_total": log[-1]["sim_time"],
+    }
+    info = {
+        "loss_curve": [round(l, 4) for l in losses],
+        "loss_decreasing_trend": bool(
+            losses[-1] < losses[0]
+            and np.mean(losses[half:]) < np.mean(losses[:half])),
+    }
+    _extra(ctx, arch=f"{TRAIN_LM_ARCH}-reduced",
+           tokens_per_round=tokens_round, n_devices=n_dev,
+           backend=jax.default_backend())
+    return [make_row(point.coords, rec, info=info)]
 
 
-BENCHES = {
-    "fig1": bench_fig1,
-    "thm1": bench_thm1,
-    "thm2": bench_thm2,
-    "sec52": bench_sec52,
-    "engine": bench_engine,
-    "compression": bench_compression,
-    "async": bench_async,
-    "controller": bench_controller,
-    "comm": bench_comm,
-    "kernels": bench_kernels,
-    "serve": bench_serve,
-    "train_lm": bench_train_lm,
+def _post_train_lm(rows, ctx):
+    out = []
+    for p in _train_lm_projection(TRAIN_LM_ARCH):
+        out.append(make_row(
+            {"method": f"projection:{p['shape']}@{p['mesh']}"},
+            {k: p[k] for k in ("n_devices", "tokens_per_round",
+                               "round_s_roofline", "tok_s_dev_roofline",
+                               "tok_s_dev_compute_bound",
+                               "model_flops_utilization")},
+            info={k: p[k] for k in ("shape", "mesh", "mode", "tag",
+                                    "dominant_term")}))
+    return out
+
+
+def _sum_train_lm(doc):
+    out = []
+    for r in doc["rows"]:
+        method = r["coords"]["method"]
+        m = r["metrics"]
+        if method.startswith("projection:"):
+            shape = (r.get("info") or {}).get(
+                "shape", method.split(":", 1)[1].split("@")[0])
+            tsd = m.get("tok_s_dev_roofline",
+                        m.get("tokens_per_s_per_device"))
+            if tsd is not None:
+                out.append((f"tok_s_dev_proj_{shape}", tsd))
+            continue
+        mname = method.replace("-", "_")
+        if "loss_first" in m and "loss_last" in m:
+            out.append((f"loss_drop_{mname}",
+                        round(m["loss_first"] - m["loss_last"], 4)))
+        if "tokens_per_s_per_device" in m:
+            out.append((f"tok_s_dev_{mname}", m["tokens_per_s_per_device"]))
+    return out
+
+
+register(BenchDef(
+    "train_lm",
+    MatrixConfig.make("train_lm", {"method": ENGINE_BENCH_METHODS},
+                      fixed=dict(clients=4, h_local=8, batch=4, seq=64,
+                                 rounds=10)),
+    _run_train_lm, _sum_train_lm, post=_post_train_lm,
+    note="projection rows (method='projection:<shape>@<mesh>') come from "
+         "the dry-run cost model, not a run — their tok_s_dev_* metrics "
+         "are deterministic roofline outputs"))
+
+
+# --------------------------------------------------------------------------- #
+# legacy alias CLI — the old subcommands as thin aliases over matrix configs
+# --------------------------------------------------------------------------- #
+
+
+ALIASES = {
+    "fig1": ("fig1",),
+    "thm1": ("thm1",),
+    "thm2": ("thm2",),
+    "sec52": ("sec52",),
+    "engine": ("engine",),
+    "compression": ("compression",),
+    "async": ("async",),
+    "controller": ("async",),     # controller rows live on the arm axis now
+    "comm": ("comm",),
+    "kernels": ("kernels", "kernels_fused", "kernels_sharded"),
+    "serve": ("serve",),
+    "train_lm": ("train_lm",),
 }
 
 
-def main():
+def main(argv=None):
     import argparse
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
-    names = [n for n in BENCHES if not args.only or n in args.only.split(",")]
+    ap = argparse.ArgumentParser(
+        description="Run benches by their legacy subcommand names (thin "
+                    "aliases over benchmarks.matrix configs); prints the "
+                    "benchmark,metric,value trajectory lines")
+    ap.add_argument("--only", default="",
+                    help="comma-separated legacy names (default: all)")
+    args = ap.parse_args(argv)
+    names = [n for n in ALIASES if not args.only or n in args.only.split(",")]
+    todo = []
+    for alias in names:
+        for bench in ALIASES[alias]:
+            if bench in todo or bench not in matrix._registry():
+                continue
+            todo.append(bench)
     print("benchmark,metric,value")
-    for name in names:
+    for bench in todo:
         t0 = time.time()
-        out, path = BENCHES[name]()
-        for b, metric, val in out:
-            print(f"{b},{metric},{val}", flush=True)
-        print(f"{name},seconds,{time.time()-t0:.1f}", flush=True)
+        doc = matrix.run_bench(bench)
+        for metric, value in matrix.summarize(doc):
+            print(f"{bench},{metric},{value}", flush=True)
+        print(f"{bench},seconds,{time.time() - t0:.1f}", flush=True)
 
 
 if __name__ == "__main__":

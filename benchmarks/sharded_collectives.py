@@ -1,8 +1,10 @@
 """Per-step collective bytes of the shard-mapped fused local step — the
-sharded rows of BENCH_kernels.json (DESIGN.md §7).
+rows of BENCH_kernels_sharded.json (DESIGN.md §7, §11).
 
-Standalone subprocess (benchmarks/run.py --only kernels spawns it): the main
-benchmark process keeps 1 CPU device, this worker forces 8 host devices and
+Standalone subprocess (the matrix harness's ``kernels_sharded`` bench in
+benchmarks/run.py spawns it once and fans its record out over the ``plan``
+axis): the main benchmark process keeps 1 CPU device, this worker forces 8
+host devices and
 lowers ONE local step of the flat-buffer pipeline under model-/FSDP-/mixed-
 sharded plans, three arms per plan:
 

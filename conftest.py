@@ -1,0 +1,10 @@
+"""Repo-root pytest conftest: make the `benchmarks` package and `repro`
+(src layout) importable without relying on the caller's PYTHONPATH — the
+bench-harness suites import benchmarks.matrix directly."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

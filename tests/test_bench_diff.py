@@ -1,0 +1,137 @@
+"""benchmarks/diff.py tests: join-on-coordinates correctness, missing-row
+surfacing (a point present in A but not B is reported, never silently
+dropped), per-metric delta sign conventions, and the timing/comparable
+split, on two small synthetic BENCH fixtures."""
+import json
+
+import pytest
+
+from benchmarks import diff, matrix
+
+
+def _doc(rows, rev="revA", bench="toy", axes=("method", "arm")):
+    return {"schema_version": matrix.SCHEMA_VERSION, "bench": bench,
+            "git_rev": rev, "config": {}, "axes": list(axes), "rows": rows}
+
+
+def _row(method, arm, rev="revA", **metrics):
+    return {"coords": {"method": method, "arm": arm}, "metrics": metrics,
+            "git_rev": rev}
+
+
+def _fixture_a():
+    return _doc([
+        _row("savic", "sync", final_loss=1.0, sim_time_to_target=10.0,
+             round_ms_mean=5.0),
+        _row("savic", "async", final_loss=0.8, sim_time_to_target=4.0,
+             round_ms_mean=6.0),
+        _row("fedavg", "sync", final_loss=2.0, sim_time_to_target=20.0,
+             round_ms_mean=7.0),
+    ])
+
+
+def _fixture_b(rev="revB"):
+    return _doc([
+        # final_loss improves (delta -0.5), sim time regresses (delta +2.0),
+        # wall clock differs (timing, never a regression)
+        _row("savic", "sync", rev=rev, final_loss=0.5,
+             sim_time_to_target=12.0, round_ms_mean=9.0),
+        _row("savic", "async", rev=rev, final_loss=0.8,
+             sim_time_to_target=4.0, round_ms_mean=6.5),
+        # fedavg/sync missing; extra point instead
+        _row("fedavg", "async", rev=rev, final_loss=1.5,
+             sim_time_to_target=8.0, round_ms_mean=7.0),
+    ], rev=rev)
+
+
+def test_join_on_coordinates_and_sign_convention():
+    rep = diff.diff_docs(_fixture_a(), _fixture_b())
+    by = {tuple(r["coords"].values()): r for r in rep["rows"]}
+    d = by[("savic", "sync")]["deltas"]
+    assert d["final_loss"]["delta"] == pytest.approx(-0.5)   # b - a
+    assert d["final_loss"]["rel"] == pytest.approx(-0.5)     # delta / |a|
+    assert d["sim_time_to_target"]["delta"] == pytest.approx(2.0)
+    # identical row -> deltas present but unchanged
+    assert not any(v["changed"]
+                   for v in by[("savic", "async")]["deltas"].values()
+                   if v["kind"] == "comparable")
+
+
+def test_missing_rows_surfaced_never_dropped():
+    rep = diff.diff_docs(_fixture_a(), _fixture_b())
+    assert rep["only_in_a"] == [{"method": "fedavg", "arm": "sync"}]
+    assert rep["only_in_b"] == [{"method": "fedavg", "arm": "async"}]
+    assert rep["n_missing"] == 2
+    text = diff.format_report(rep)
+    assert "MISSING in B" in text and "MISSING in A" in text
+
+
+def test_timing_vs_comparable_classification():
+    rep = diff.diff_docs(_fixture_a(), _fixture_b())
+    by = {tuple(r["coords"].values()): r for r in rep["rows"]}
+    d = by[("savic", "sync")]["deltas"]
+    assert d["round_ms_mean"]["kind"] == "timing"
+    assert d["final_loss"]["kind"] == "comparable"
+    assert d["sim_time_to_target"]["kind"] == "comparable"
+    # savic/sync: 2 comparable + 1 timing changed; savic/async: 1 timing
+    assert rep["n_comparable_deltas"] == 2
+    assert rep["n_timing_deltas"] == 2
+
+
+def test_self_diff_is_clean():
+    rep = diff.diff_docs(_fixture_a(), _fixture_a())
+    assert rep["n_comparable_deltas"] == 0
+    assert rep["n_timing_deltas"] == 0
+    assert rep["n_missing"] == 0
+    assert not rep["only_in_a"] and not rep["only_in_b"]
+
+
+def test_missing_metrics_surfaced():
+    a, b = _fixture_a(), _fixture_a()
+    del b["rows"][0]["metrics"]["sim_time_to_target"]
+    b["rows"][0]["metrics"]["new_metric"] = 1.0
+    rep = diff.diff_docs(a, b)
+    row = rep["rows"][0]
+    assert row["metrics_only_in_a"] == ["sim_time_to_target"]
+    assert row["metrics_only_in_b"] == ["new_metric"]
+    assert rep["n_missing"] == 2
+
+
+def test_tolerances():
+    a, b = _fixture_a(), _fixture_a()
+    b["rows"][0]["metrics"]["final_loss"] = 1.0 + 1e-9
+    assert diff.diff_docs(a, b)["n_comparable_deltas"] == 1
+    assert diff.diff_docs(a, b, atol=1e-6)["n_comparable_deltas"] == 0
+    assert diff.diff_docs(a, b, rtol=1e-6)["n_comparable_deltas"] == 0
+
+
+def test_mismatched_bench_or_axes_raise():
+    with pytest.raises(ValueError, match="bench mismatch"):
+        diff.diff_docs(_fixture_a(), _doc([], bench="other"))
+    with pytest.raises(ValueError, match="axis mismatch"):
+        diff.diff_docs(_fixture_a(), _doc([
+            {"coords": {"method": "a"}, "metrics": {"v": 1.0},
+             "git_rev": "r"}], axes=("method",)))
+
+
+def test_invalid_doc_rejected():
+    bad = _fixture_a()
+    bad["rows"][0].pop("git_rev")
+    with pytest.raises(ValueError, match="git_rev"):
+        diff.diff_docs(bad, _fixture_b())
+
+
+def test_cli_check_exit_codes(tmp_path):
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    pa.write_text(json.dumps(_fixture_a()))
+    pb.write_text(json.dumps(_fixture_b()))
+    assert diff.main([str(pa), str(pa), "--check"]) == 0   # self-diff clean
+    assert diff.main([str(pa), str(pb), "--check"]) == 1   # deltas + missing
+    assert diff.main([str(pa), str(pb)]) == 0              # report-only
+
+    # timing-only differences never fail --check
+    c = _fixture_a()
+    c["rows"][0]["metrics"]["round_ms_mean"] = 99.0
+    pc = tmp_path / "c.json"
+    pc.write_text(json.dumps(c))
+    assert diff.main([str(pa), str(pc), "--check"]) == 0

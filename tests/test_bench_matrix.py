@@ -1,0 +1,156 @@
+"""Matrix-core tests (DESIGN.md §11): deterministic expansion, axis-product
+counts, fixed-param precedence, row construction, and the benchalot-style
+``update-output`` invariant — CSV regeneration from stored JSON must be
+byte-identical and must never invoke a runner."""
+import json
+import os
+
+import pytest
+
+from benchmarks import matrix
+from benchmarks.matrix import BenchDef, MatrixConfig, make_row
+
+
+def _cfg(**kw):
+    base = dict(name="toy", axes={"method": ("a", "b"), "arm": ("x", "y", "z")},
+                fixed={"rounds": 3, "clients": 8})
+    base.update(kw)
+    return MatrixConfig.make(**base)
+
+
+# --------------------------------------------------------------------------- #
+# expansion
+# --------------------------------------------------------------------------- #
+
+
+def test_expand_deterministic_order():
+    a = matrix.expand(_cfg())
+    b = matrix.expand(_cfg())
+    assert [p.coords for p in a] == [p.coords for p in b]
+    # declared axis order, last axis fastest
+    assert [p.coords for p in a[:4]] == [
+        {"method": "a", "arm": "x"}, {"method": "a", "arm": "y"},
+        {"method": "a", "arm": "z"}, {"method": "b", "arm": "x"}]
+
+
+def test_expand_axis_product_counts():
+    assert len(matrix.expand(_cfg())) == 2 * 3
+    assert len(matrix.expand(_cfg(samples=4))) == 2 * 3 * 4
+    assert len(matrix.expand(_cfg(), limit=5)) == 5
+    assert len(matrix.expand(_cfg(), select={"arm": ("y",)})) == 2
+
+
+def test_expand_select_unknown_axis_and_empty():
+    with pytest.raises(KeyError):
+        matrix.expand(_cfg(), select={"nope": ("a",)})
+    with pytest.raises(ValueError):
+        matrix.expand(_cfg(), select={"arm": ("missing",)})
+
+
+def test_expand_samples_seed_policy():
+    pts = matrix.expand(_cfg(samples=3, seed0=7))
+    assert [p.seed for p in pts[:3]] == [7, 8, 9]          # samples innermost
+    assert [p.coords["sample"] for p in pts[:3]] == [0, 1, 2]
+    assert "sample" in _cfg(samples=3).coord_keys()
+    assert "sample" not in _cfg().coord_keys()
+
+
+def test_fixed_param_override_precedence():
+    pts = matrix.expand(_cfg(), overrides={"rounds": 99, "new_knob": 1})
+    assert pts[0].fixed == {"rounds": 99, "clients": 8, "new_knob": 1}
+    assert matrix.expand(_cfg())[0].fixed == {"rounds": 3, "clients": 8}
+
+
+# --------------------------------------------------------------------------- #
+# rows
+# --------------------------------------------------------------------------- #
+
+
+def test_make_row_partitions_numeric_vs_info():
+    row = make_row({"method": "a"},
+                   {"loss": 1.5, "rounds": 3, "flag": True,
+                    "curve": [1, 2], "tag": "x"},
+                   rev="r1")
+    assert row["metrics"] == {"loss": 1.5, "rounds": 3}   # bools are not metrics
+    assert row["info"] == {"flag": True, "curve": [1, 2], "tag": "x"}
+    assert row["git_rev"] == "r1"
+
+
+def test_make_row_scalarizes_numpy():
+    np = pytest.importorskip("numpy")
+    row = make_row({"k": np.float64(0.5)}, {"v": np.int64(3)}, rev="r")
+    assert type(row["coords"]["k"]) is float
+    assert type(row["metrics"]["v"]) is int
+
+
+# --------------------------------------------------------------------------- #
+# update-output: byte-identical CSV from stored JSON, zero reruns
+# --------------------------------------------------------------------------- #
+
+
+def _toy_doc(rev="r1"):
+    return {
+        "schema_version": matrix.SCHEMA_VERSION, "bench": "toy",
+        "git_rev": rev, "config": {"rounds": 3},
+        "axes": ["method", "arm"],
+        "rows": [
+            make_row({"method": "a", "arm": "x"}, {"loss": 0.5, "ms": 1.25},
+                     rev=rev),
+            make_row({"method": "a", "arm": "y"}, {"loss": 0.25}, rev=rev),
+        ],
+    }
+
+
+def test_update_output_byte_identical_no_rerun(tmp_path, monkeypatch):
+    out, res = str(tmp_path), str(tmp_path / "results")
+    json_path, csv_path = matrix.write_outputs(_toy_doc(), out_dir=out,
+                                               results_dir=res)
+    first = open(csv_path, "rb").read()
+    os.remove(csv_path)
+
+    # a registry whose runner must NEVER fire during update-output
+    def _boom(point, ctx):
+        raise AssertionError("update-output invoked a runner")
+
+    monkeypatch.setitem(matrix.REGISTRY, "toy", BenchDef(
+        "toy", _cfg(), _boom,
+        summary=lambda doc: [("n_rows", len(doc["rows"]))]))
+    doc, regen = matrix.update_output(json_path, results_dir=res)
+    assert open(regen, "rb").read() == first
+    assert matrix.summarize(doc) == [("n_rows", 2)]
+
+
+def test_render_csv_missing_metrics_are_empty_cells():
+    csv = matrix.render_csv(_toy_doc())
+    lines = csv.splitlines()
+    assert lines[0] == "method,arm,loss,ms,git_rev"   # first-seen metric order
+    assert lines[2] == "a,y,0.25,,r1"                 # missing ms -> empty
+
+
+def test_write_outputs_rejects_invalid():
+    doc = _toy_doc()
+    doc["rows"][0]["git_rev"] = ""
+    with pytest.raises(ValueError):
+        matrix.write_outputs(doc, out_dir="/tmp/never", results_dir="/tmp/never")
+
+
+def test_run_bench_tags_rows_and_merges_config(tmp_path, monkeypatch):
+    cfg = MatrixConfig.make("toy", {"method": ("a", "b")}, fixed={"rounds": 2})
+
+    def _run(point, ctx):
+        ctx.setdefault("config_extra", {})["backend"] = "cpu"
+        return [make_row(point.coords, {"loss": 1.0 if point.coords["method"]
+                                        == "a" else 2.0})]
+
+    monkeypatch.setitem(matrix.REGISTRY, "toy", BenchDef("toy", cfg, _run))
+    doc = matrix.run_bench("toy", out_dir=str(tmp_path),
+                           results_dir=str(tmp_path / "r"),
+                           overrides={"rounds": 5})
+    assert doc["config"]["rounds"] == 5                  # override precedence
+    assert doc["config"]["backend"] == "cpu"             # ctx config_extra
+    assert [r["coords"] for r in doc["rows"]] == [{"method": "a"},
+                                                  {"method": "b"}]
+    rev = doc["git_rev"]
+    assert rev and all(r["git_rev"] == rev for r in doc["rows"])
+    assert not matrix.validate_doc(json.load(
+        open(tmp_path / "BENCH_toy.json")))

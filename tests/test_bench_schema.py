@@ -1,0 +1,135 @@
+"""Golden-schema regression tests (DESIGN.md §11): every committed
+BENCH_*.json and results/bench/*.csv must validate against the uniform row
+schema — required keys, axis-coordinate completeness, git_rev presence
+(pre-PR-8 history is backfilled as "unknown", never absent), numeric metric
+types — and the CSV must be the byte-exact render of its JSON document."""
+import glob
+import json
+import os
+
+import pytest
+
+from benchmarks import matrix
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSONS = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+BENCH_CSVS = sorted(glob.glob(os.path.join(ROOT, "results", "bench", "*.csv")))
+
+
+def _bench_name(path):
+    return os.path.basename(path)[len("BENCH_"):-len(".json")]
+
+
+def test_committed_artifacts_exist():
+    assert BENCH_JSONS, "no BENCH_*.json at the repo root"
+    assert BENCH_CSVS, "no results/bench/*.csv"
+
+
+@pytest.mark.parametrize("path", BENCH_JSONS, ids=_bench_name)
+def test_bench_json_validates(path):
+    errs = matrix.validate_doc(json.load(open(path)))
+    assert not errs, f"{os.path.basename(path)}:\n" + "\n".join(errs)
+
+
+@pytest.mark.parametrize("path", BENCH_JSONS, ids=_bench_name)
+def test_bench_rows_tagged_with_git_rev(path):
+    doc = json.load(open(path))
+    for i, row in enumerate(doc["rows"]):
+        assert row.get("git_rev"), f"rows[{i}] untagged"
+        # coordinate completeness: every row addresses the full axis tuple
+        assert set(row["coords"]) == set(doc["axes"])
+
+
+@pytest.mark.parametrize("path", BENCH_CSVS,
+                         ids=lambda p: os.path.basename(p)[:-4])
+def test_bench_csv_is_render_of_json(path):
+    name = os.path.basename(path)[:-len(".csv")]
+    json_path = os.path.join(ROOT, f"BENCH_{name}.json")
+    assert os.path.exists(json_path), (
+        f"{os.path.basename(path)} has no BENCH_{name}.json store of record")
+    doc = json.load(open(json_path))
+    assert open(path).read() == matrix.render_csv(doc), (
+        f"{name}.csv is not the byte-exact render of BENCH_{name}.json — "
+        "regenerate with: python -m benchmarks.matrix update-output "
+        f"--bench {name}")
+
+
+def test_every_json_has_csv_mirror():
+    for path in BENCH_JSONS:
+        name = _bench_name(path)
+        assert os.path.join(ROOT, "results", "bench",
+                            f"{name}.csv") in BENCH_CSVS, (
+            f"BENCH_{name}.json has no results/bench/{name}.csv mirror")
+
+
+# --------------------------------------------------------------------------- #
+# validator rejection cases — new rows cannot regress below the schema
+# --------------------------------------------------------------------------- #
+
+
+def _valid_doc():
+    return {"schema_version": 1, "bench": "t", "git_rev": "r",
+            "config": {}, "axes": ["m"],
+            "rows": [{"coords": {"m": "a"}, "metrics": {"v": 1.0},
+                      "git_rev": "r"}]}
+
+
+def test_validator_accepts_valid():
+    assert matrix.validate_doc(_valid_doc()) == []
+
+
+@pytest.mark.parametrize("mutate, frag", [
+    (lambda d: d.pop("schema_version"), "schema_version"),
+    (lambda d: d.update(schema_version=99), "schema_version"),
+    (lambda d: d.pop("git_rev"), "git_rev"),
+    (lambda d: d.update(axes=[]), "axes"),
+    (lambda d: d.update(axes=["m", "m"]), "axes"),
+    (lambda d: d["rows"][0].pop("git_rev"), "git_rev"),
+    (lambda d: d["rows"][0].update(git_rev=""), "git_rev"),
+    (lambda d: d["rows"][0].update(coords={}), "coordinate completeness"),
+    (lambda d: d["rows"][0].update(coords={"m": "a", "extra": 1}),
+     "coordinate completeness"),
+    (lambda d: d["rows"][0].update(metrics={}), "metrics"),
+    (lambda d: d["rows"][0].update(metrics={"v": "fast"}), "not numeric"),
+    (lambda d: d["rows"][0].update(metrics={"v": True}), "not numeric"),
+    (lambda d: d["rows"][0].update(metrics={"v": float("nan")}), "NaN"),
+    (lambda d: d["rows"][0].update(unexpected=1), "unknown keys"),
+    (lambda d: d["rows"].append(dict(d["rows"][0])), "duplicate"),
+], ids=["no_version", "bad_version", "no_doc_rev", "empty_axes", "dup_axes",
+        "untagged_row", "empty_rev", "no_coords", "extra_coord",
+        "empty_metrics", "string_metric", "bool_metric", "nan_metric",
+        "unknown_key", "dup_coords"])
+def test_validator_rejects(mutate, frag):
+    doc = _valid_doc()
+    mutate(doc)
+    errs = matrix.validate_doc(doc)
+    assert errs and any(frag in e for e in errs), errs
+
+
+def test_assert_valid_raises_with_bench_name():
+    doc = _valid_doc()
+    doc["rows"][0]["git_rev"] = ""
+    with pytest.raises(ValueError, match="git_rev"):
+        matrix.assert_valid(doc)
+
+
+# --------------------------------------------------------------------------- #
+# timing classification — wall-clock fields are noise, not regressions
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("name", [
+    "round_ms_mean", "round_ms_first", "us_fused_oracle", "ttft_s",
+    "p99_token_s", "wall_tok_per_s", "tok_per_s", "tokens_per_s_per_device",
+    "round_wall_s_mean", "seconds"])
+def test_timing_metrics(name):
+    assert matrix.is_timing_metric(name)
+
+
+@pytest.mark.parametrize("name", [
+    "sim_time_to_target", "sim_round_time", "final_loss", "rounds",
+    "wire_bytes_per_round", "compression_x", "collective_bytes_sharded",
+    "hbm_reduction_x", "tok_s_dev_roofline", "makespan_steps",
+    "tok_per_step", "b_eff"])
+def test_comparable_metrics(name):
+    assert not matrix.is_timing_metric(name)
