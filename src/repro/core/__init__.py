@@ -11,5 +11,7 @@ Public API:
 from repro.core.preconditioner import PrecondConfig  # noqa
 from repro.core.controller import ControllerSpec  # noqa
 from repro.core.engine import AsyncSpec, CompressionSpec, EngineSpec  # noqa
+from repro.core.objectives import ClientObjective, ObjectiveSpec  # noqa
 from repro.core.savic import SavicConfig, build_round_step, init_state  # noqa
-from repro.core import controller, engine, fedopt, theory, schedules  # noqa
+from repro.core import (controller, engine, fedopt, objectives,  # noqa
+                        theory, schedules)

@@ -201,17 +201,38 @@ class AsyncSpec:
 @dataclasses.dataclass(frozen=True)
 class SyncSpec:
     """The weighted, optionally quantized/compressed, optionally partial,
-    optionally staleness-buffered sync average."""
+    optionally staleness-buffered sync average.
+
+    ``personal`` (DESIGN.md §12) is a tuple of path substrings naming
+    CLIENT-RESIDENT parameter leaves — a personalization mask. A leaf whose
+    "/"-joined tree path contains any pattern (e.g. ``("final_norm",)`` for
+    the LM's local head) is excluded from the entire sync surface: it is
+    never averaged, compressed, buffered, EF-tracked, broadcast back, or fed
+    to the adaptive server — each client keeps its own copy across rounds,
+    exactly like the per-client D under local scaling. The empty default
+    touches nothing: the engine emits the bit-exact pre-personalization
+    program.
+    """
     participation: float = 1.0     # fraction of clients entering the average
     sync_dtype: str = ""           # all-reduce dtype ("" = full precision)
     average_momentum: bool = True  # also average momentum buffers at sync
     compression: CompressionSpec = CompressionSpec()
     asynchrony: AsyncSpec = AsyncSpec()
+    personal: tuple = ()           # client-resident leaf path patterns
 
     def __post_init__(self):
         if not 0.0 < self.participation <= 1.0:
             raise ValueError(f"participation={self.participation}; "
                              f"expected 0 < p <= 1")
+        if isinstance(self.personal, str):
+            # a bare string would silently become a tuple of characters
+            raise ValueError(f"personal={self.personal!r}; expected a tuple "
+                             f"of path-substring patterns, not a bare string")
+        pats = tuple(self.personal) if self.personal else ()
+        if not all(isinstance(p, str) and p for p in pats):
+            raise ValueError(f"personal={self.personal!r}; expected a tuple "
+                             f"of non-empty path-substring patterns")
+        object.__setattr__(self, "personal", pats)
         if self.sync_dtype:
             try:
                 jnp.dtype(self.sync_dtype)
@@ -310,6 +331,7 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
                 staleness_weight: str = "constant",
                 server_sync_dtype: str = "", server_sync_k: float = 1.0,
                 controller: Optional[ControllerSpec] = None,
+                personal: tuple = (),
                 use_fused_kernel: bool = False) -> EngineSpec:
     """Canonical EngineSpec for each named method.
 
@@ -335,7 +357,10 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
     every method runs under systems heterogeneity and a staleness-buffered
     server (DESIGN.md §5). ``controller`` (a ControllerSpec) and the
     ``server_sync_dtype``/``server_sync_k`` server-state compression are
-    likewise method-agnostic (DESIGN.md §10).
+    likewise method-agnostic (DESIGN.md §10). ``personal`` is the
+    client-resident leaf mask (``SyncSpec.personal``, DESIGN.md §12) —
+    method-agnostic too, though methods with a GLOBAL non-identity D (savic's
+    default scaling) must switch to ``scaling="local"`` to combine with it.
     """
     comp = compression if isinstance(compression, CompressionSpec) \
         else CompressionSpec(op=compression, k=compression_k,
@@ -396,6 +421,10 @@ def method_spec(method: str, *, pc_kind: str = "adam", alpha: float = 1e-2,
                          f"m/v state to compress")
     if controller is not None:
         spec = dataclasses.replace(spec, controller=controller)
+    if personal:
+        spec = dataclasses.replace(
+            spec, sync=dataclasses.replace(spec.sync,
+                                           personal=tuple(personal)))
     return spec
 
 
@@ -422,31 +451,76 @@ def init_state(key, init_params_fn, spec: EngineSpec, n_clients: int):
         "precond": pstate,
         "round": jnp.int32(0),
     }
+    # personalization (DESIGN.md §12): server/ef/buffer state exists only for
+    # the SYNCED leaves — personal leaves never reach the sync surface, so
+    # their slots are None-stripped out of every server-side tree. The empty
+    # mask strips nothing: bit-exact pre-personalization state.
+    personal = spec.sync.personal
+    params_sync = strip_personal(personal, params)
     if spec.server.kind == "adaptive":
         v0 = spec.server.v_init if spec.server.v_init is not None \
             else spec.server.tau ** 2
         state["server"] = {
-            "m": jax.tree.map(jnp.zeros_like, params),
-            "v": jax.tree.map(lambda p: jnp.full_like(p, v0), params),
+            "m": jax.tree.map(jnp.zeros_like, params_sync),
+            "v": jax.tree.map(lambda p: jnp.full_like(p, v0), params_sync),
         }
     comp = spec.sync.compression
     if comp.error_feedback and not comp.is_identity():
         # EF residual e_m: per-client, shaped like params (DESIGN.md §4).
         # Identity compression drops nothing, so the leaf would stay zero —
         # omitted to keep the state pytree (and program) bit-identical.
-        state["ef"] = jax.tree.map(jnp.zeros_like, params_m)
+        state["ef"] = jax.tree.map(jnp.zeros_like,
+                                   strip_personal(personal, params_m))
     asy = spec.sync.asynchrony
     if not asy.is_identity():
         # staleness delta FIFO: single-replica shaped, leading B dim, sharded
         # like one replica's params (DESIGN.md §5) — server state, like m/v
         state["buffer"] = jax.tree.map(
             lambda p: jnp.zeros((asy.buffer_rounds,) + p.shape, p.dtype),
-            params)
+            params_sync)
     if spec.controller.enabled:
         # controller knobs + EMA stats (DESIGN.md §10): small scalar/(M,)
         # leaves that ride the state pytree through checkpoint/shard/donate
         state["ctrl"] = CTRL.init_ctrl_state(spec.controller, n_clients)
     return state
+
+
+def strip_personal(personal: tuple, tree, is_leaf=None):
+    """Replace every personal leaf (path contains a ``personal`` pattern)
+    with ``None`` — jax pytrees treat ``None`` as an empty subtree, so the
+    stripped tree's leaves are exactly the SYNCED leaves: ``jax.tree.map``
+    over stripped trees touches no personal state and ``jax.tree.leaves``
+    counts no personal bytes. The empty mask returns the tree unchanged
+    (bit-exact identity; DESIGN.md §12)."""
+    if not personal:
+        return tree
+    # ``is_leaf`` lets the launch layer strip trees whose leaves are
+    # themselves containers (PartitionSpec tuples in sharding-spec trees)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree,
+                                                         is_leaf=is_leaf)
+    new = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                keys.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        s = "/".join(keys)
+        new.append(None if any(pat in s for pat in personal) else leaf)
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def _merge_personal(stripped, full, merge_fn):
+    """Recombine a synced (None-stripped) tree with the full per-client tree:
+    personal positions keep ``full``'s leaf, synced positions get
+    ``merge_fn(stripped_leaf, full_leaf)``. Treating ``None`` as a leaf makes
+    the stripped tree's structure match the full one's."""
+    return jax.tree.map(
+        lambda s, f: f if s is None else merge_fn(s, f),
+        stripped, full, is_leaf=lambda x: x is None)
 
 
 def average_params(state):
@@ -488,7 +562,21 @@ def _apply_update(params, mom, grads, pstate, spec: EngineSpec):
     return params, mom
 
 
-def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None):
+def _objective_grad(objective):
+    """Keyed value-and-grad of a non-identity ClientObjective: the per-step
+    key is folded by ``_OBJECTIVE_FOLD`` so the objective's noise stream
+    (consistency views, token dropout) is decoupled from the Hutchinson
+    probe and every other consumer of the step key (DESIGN.md §12)."""
+    from repro.core.objectives import _OBJECTIVE_FOLD
+    vg = jax.value_and_grad(objective.loss)
+
+    def grad3(params, micro, key):
+        return vg(params, micro, jax.random.fold_in(key, _OBJECTIVE_FOLD))
+    return grad3
+
+
+def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None,
+                 objective=None):
     """H local steps, vmap-over-M inside a lax.scan over H.
 
     Returns ``run(params_m, mom_m, pstate, micro, keys, h_m=None) ->
@@ -497,12 +585,25 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None):
     int32 per-client step budget (the controller's round-addressable H_m,
     DESIGN.md §10): same masking machinery as the static ``local_steps``
     vector but with the bound read from state — no recompile as it moves.
+
+    ``objective`` (an optional ``objectives.ClientObjective``) swaps the
+    differentiated loss: a non-identity objective is consulted with the
+    per-step key (semi-supervised losses are stochastic); ``None`` or an
+    identity objective leaves the unkeyed ``grad_fn`` call — and hence the
+    emitted program — bit-exactly as before (DESIGN.md §12). The D̂
+    curvature probes keep using the supervised ``loss_fn``: Assumption-4
+    scaling tracks the geometry of the task loss, not the regularizer.
     """
     cl, pc = spec.client, spec.precond
+    semi = objective is not None and not objective.is_identity()
+    obj_grad = _objective_grad(objective) if semi else None
 
     def local_step_one_client(params, mom, pstate, micro, key):
         """One scaled step on one client. pstate: the client's view of D."""
-        loss, grads = grad_fn(params, micro)
+        if semi:
+            loss, grads = obj_grad(params, micro, key)
+        else:
+            loss, grads = grad_fn(params, micro)
         grads = _clip(grads, cl.grad_clip)
         if cl.scaling == "local" and pc.kind != "identity":
             stat = (PC.hutchinson_diag(loss_fn, params, micro, key)
@@ -564,7 +665,8 @@ def _client_loop(loss_fn, grad_fn, spec: EngineSpec, shard_plan=None):
 
     if cl.use_fused_kernel:
         return local_step_one_client, _fused_run(loss_fn, grad_fn, spec, run,
-                                                 shard_plan)
+                                                 shard_plan,
+                                                 objective=objective)
     return local_step_one_client, run
 
 
@@ -630,7 +732,8 @@ def _shard_flat_ops(plan, local):
     return flat_m, unflat_m, flat_d, unflat_d, fused_step
 
 
-def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None):
+def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None,
+               objective=None):
     """The flat-buffer fused client loop (DESIGN.md §7).
 
     Same contract as the tree ``run``, but the whole client state rides as
@@ -656,6 +759,11 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None):
     has_d = pc.kind != "identity"
     # "local" here = D advances inside the loop (global D updates at sync)
     local = cl.scaling == "local" and has_d
+    # semi-supervised objective: the fused Pallas update is grad-source
+    # agnostic — only the (keyed) grad call changes, so the fast path stays
+    # engaged under every objective (DESIGN.md §12)
+    semi = objective is not None and not objective.is_identity()
+    obj_grad = _objective_grad(objective) if semi else None
 
     def run(params_m, mom_m, pstate, micro, keys, h_m=None):
         if not (all_float32(params_m) and all_float32(mom_m)
@@ -685,7 +793,10 @@ def _fused_run(loss_fn, grad_fn, spec: EngineSpec, tree_run, shard_plan=None):
             else:
                 micro_m, ks = xs
             params_tree = unflat_m(carry["p"])
-            losses, grads = jax.vmap(grad_fn)(params_tree, micro_m)
+            if semi:
+                losses, grads = jax.vmap(obj_grad)(params_tree, micro_m, ks)
+            else:
+                losses, grads = jax.vmap(grad_fn)(params_tree, micro_m)
             if cl.grad_clip:
                 # tree-level clip, exactly as the tree path: the CLIPPED
                 # grads are what the carry freezes for the sync-time D stat
@@ -870,7 +981,13 @@ def bytes_on_wire(spec: EngineSpec, params) -> dict:
     uncompressed legs move ``sync_dtype`` bytes (fp32 when unset). Momentum,
     when averaged (``average_momentum`` under an averaging server), always
     moves uncompressed.
+
+    Personal (client-resident) leaves move NOTHING: they are stripped from
+    every leg — delta, momentum, and the server m/v sync — before counting,
+    so the reported payload is exactly the synced subset's (the synced
+    leaves' accounting is unchanged by personalization; DESIGN.md §12).
     """
+    params = strip_personal(spec.sync.personal, params)
     sy, comp = spec.sync, spec.sync.compression
     elem = jnp.dtype(sy.sync_dtype).itemsize if sy.sync_dtype else 4
     delta = raw = 0
@@ -986,11 +1103,12 @@ def make_sync(spec: SyncSpec, key, n_clients: int):
 def _broadcast_back(params_m, avg):
     """Scatter the averaged value back to every client in sync dtype; cast to
     the master dtype locally (cross-device FedAvg semantics: non-participants
-    are overwritten too)."""
-    return jax.tree.map(
-        lambda p, a: jnp.broadcast_to(a[None], (p.shape[0],) + a.shape
-                                      ).astype(p.dtype),
-        params_m, avg)
+    are overwritten too). ``avg`` may be a None-stripped synced tree
+    (personalization): personal positions keep each client's own leaf."""
+    return _merge_personal(
+        avg, params_m,
+        lambda a, p: jnp.broadcast_to(a[None], (p.shape[0],) + a.shape
+                                      ).astype(p.dtype))
 
 
 # --------------------------------------------------------------------------- #
@@ -1059,7 +1177,8 @@ def _adaptive_server_update(spec: ServerSpec, server, x_prev, delta):
 # --------------------------------------------------------------------------- #
 
 
-def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
+def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None,
+                     objective=None):
     """loss_fn(params, microbatch) -> scalar.
 
     Returns ``round_step(state, batch, key)`` where each batch leaf is
@@ -1071,10 +1190,31 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
     ``use_fused_kernel`` fast path onto per-shard flat buffers via
     ``shard_map`` — the launch layer builds it for model-/FSDP-sharded plans
     (DESIGN.md §7); it is ignored when the client loop is unfused.
+
+    ``objective`` (optional ``objectives.ClientObjective``) replaces the
+    differentiated client loss with a semi-supervised one (DESIGN.md §12);
+    ``None`` or an identity (supervised) objective leaves every code path —
+    and the emitted program — bit-exactly as before. ``spec.sync.personal``
+    names client-resident leaves: those never enter the sync average, the
+    delta/compression/EF/buffer pipeline, the adaptive server, or the
+    broadcast-back — each client keeps its own copy, like the per-client D
+    under local scaling. Personalizing D itself therefore requires
+    ``scaling="local"`` (or an identity preconditioner): a GLOBAL D is by
+    definition shared state, so combining it with a personalization mask is
+    a build-time error rather than a silent wire leak.
     """
     grad_fn = jax.value_and_grad(loss_fn)
     cl, sy, sv, pc = spec.client, spec.sync, spec.server, spec.precond
-    _, client_run = _client_loop(loss_fn, grad_fn, spec, shard_plan)
+    personal = sy.personal
+    if personal and cl.scaling == "global" and pc.kind != "identity":
+        raise ValueError(
+            "personalization with a GLOBAL preconditioner: the shared D is "
+            "updated from cross-client sync gradients, which would leak the "
+            "personal leaves' gradients over the wire. Use scaling='local' "
+            "(per-client D, never synced) or pc kind='identity'.")
+    strip = lambda t: strip_personal(personal, t)
+    _, client_run = _client_loop(loss_fn, grad_fn, spec, shard_plan,
+                                 objective=objective)
     ctrl = spec.controller
     if ctrl.enabled:
         # the controller owns the knobs it schedules — conflicting static
@@ -1127,8 +1267,11 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
         # ---- Controller observations: raw per-client delta statistics ------
         ctrl_obs = None
         if ctrl.enabled:
-            x_ref0 = jax.tree.map(lambda p: p[0], state["params"])
-            d_m = jax.tree.map(lambda p, x: p - x[None], params_m, x_ref0)
+            # synced leaves only: personal deltas are client-resident and
+            # must not enter the controller's cross-client noise estimate
+            x_ref0 = strip(jax.tree.map(lambda p: p[0], state["params"]))
+            d_m = jax.tree.map(lambda p, x: p - x[None], strip(params_m),
+                               x_ref0)
             d2_pc = sum(jnp.sum(jnp.reshape(d * d, (M, -1)), axis=1)
                         for d in jax.tree.leaves(d_m))           # (M,)
             dbar_sq = sum(jnp.vdot(b, b).real for b in jax.tree.leaves(
@@ -1142,16 +1285,22 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
         avg = make_sync(sy, key, M)
         comp, asy = sy.compression, sy.asynchrony
         new_ef = delta_avg = comp_err = new_buffer = staleness = None
+        # every tree below is the SYNCED view: ``strip`` (identity for the
+        # empty personalization mask) None-strips the client-resident leaves,
+        # so no average / delta / compression / buffer op ever touches them
+        # (DESIGN.md §12) — ``params_avg`` is a synced-leaf tree recombined
+        # with the untouched personal leaves at broadcast-back
         if comp.is_identity() and asy.is_identity():
             # bit-for-bit the uncompressed synchronous program (DESIGN.md
             # §4/§5 contract) — no delta reconstruction, no residual/buffer
             # state
-            params_avg = jax.tree.map(avg, params_m)
+            params_avg = jax.tree.map(avg, strip(params_m))
         else:
             # delta form: Δ_m = x_{m,H} − x_t (clients start each round at
             # the common broadcast point, so x_t = params[0])
-            x_ref = jax.tree.map(lambda p: p[0], state["params"])
-            u_m = jax.tree.map(lambda p, x: p - x[None], params_m, x_ref)
+            x_ref = strip(jax.tree.map(lambda p: p[0], state["params"]))
+            u_m = jax.tree.map(lambda p, x: p - x[None], strip(params_m),
+                               x_ref)
             if comp.is_identity():
                 c_m = u_m
             else:
@@ -1200,12 +1349,14 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
                 lambda x, d: x + d.astype(x.dtype), x_ref, delta_avg)
 
         if sv.kind == "average":
+            # personal leaves keep each client's own value (no broadcast)
             params_m = _broadcast_back(params_m, params_avg)
             params_avg = jax.tree.map(lambda x: x[0], params_m)
             if sy.average_momentum:
-                mom_m = jax.tree.map(
-                    lambda m: jnp.broadcast_to(avg(m)[None],
-                                               m.shape).astype(m.dtype), mom_m)
+                mom_m = _merge_personal(
+                    strip(mom_m), mom_m,
+                    lambda s, m: jnp.broadcast_to(
+                        avg(s)[None], m.shape).astype(m.dtype))
 
         # ---- D update at sync (global scaling; Algorithm 1 line 4) ---------
         if cl.scaling == "global" and pc.kind != "identity":
@@ -1283,7 +1434,7 @@ def build_round_step(loss_fn: Callable, spec: EngineSpec, shard_plan=None):
             new_state["ctrl"] = new_cstate
             metrics["ctrl_gns_ema"] = new_cstate["gns_ema"]
         if sv.kind == "adaptive":
-            x_prev = jax.tree.map(lambda p: p[0], state["params"])
+            x_prev = strip(jax.tree.map(lambda p: p[0], state["params"]))
             if delta_avg is not None:
                 # compressed path: Δ is exactly the averaged compressed delta
                 # (params_avg = x_prev + Δ would re-add/re-subtract x_prev)

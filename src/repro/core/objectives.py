@@ -1,0 +1,214 @@
+"""Pluggable client objectives: semi-supervised losses for federated clients.
+
+Real federated traffic is mostly unlabeled: each client holds a local pool of
+which only a ``labeled_fraction`` carries labels (``data/federated.py::
+labeled_mask``; the loader attaches a per-example 0/1 ``"labeled"`` leaf to
+round batches). The engine's scaling machinery (DESIGN.md §1-§3) is
+objective-agnostic — it consumes ``grad(loss)`` and nothing else — so a
+client objective is just a (possibly stochastic) loss the ClientLoop
+differentiates instead of the supervised one:
+
+  supervised    the identity objective. The engine ignores the ClientObjective
+                entirely and runs the exact pre-objectives program
+                (``grad_fn = value_and_grad(loss_fn)``, unkeyed) — the bitwise
+                contract pinned by tests/test_objectives.py.
+  consistency   Π-model consistency regularization (Laine & Aila 2017; the
+                ladder-network family): supervised CE over the labeled subset
+                plus ``unlabeled_weight`` × the mean squared disagreement
+                between the prediction on a stochastically perturbed view and
+                the (stop-gradient) prediction on the clean view, over ALL
+                examples.
+  pseudo-label  Lee 2013 / FixMatch-style self-training: supervised CE over
+                the labeled subset plus ``unlabeled_weight`` × CE against the
+                model's own argmax label on UNLABELED examples whose softmax
+                confidence clears ``pseudo_threshold`` (targets are
+                stop-gradient; an empty gate contributes 0, not NaN).
+
+The stochastic view draws from a PRNG key the engine derives per
+(round, local step, client) — ``fold_in(step_key, _OBJECTIVE_FOLD)`` — so the
+objective noise is round-addressable (DESIGN.md §9) and decoupled from the
+Hutchinson probe stream. Missing ``"labeled"`` leaf = everything labeled
+(masks default to 1), so a semi-supervised objective on a fully-labeled batch
+degrades gracefully to supervised + regularizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+OBJECTIVES = ("supervised", "consistency", "pseudo-label")
+
+# decouples the objective's noise stream from the per-step key's other
+# consumers (Hutchinson uses fold_in(key, 7) at sync; compression 17;
+# participation 3)
+_OBJECTIVE_FOLD = 11
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveSpec:
+    """Declarative knob set; ``kind="supervised"`` is the identity."""
+    kind: str = "supervised"
+    unlabeled_weight: float = 1.0   # λ_u on the unlabeled term
+    pseudo_threshold: float = 0.9   # confidence gate (pseudo-label)
+    noise_sigma: float = 0.1        # perturbation scale (consistency)
+
+    def __post_init__(self):
+        if self.kind not in OBJECTIVES:
+            raise ValueError(f"objective kind {self.kind!r}; expected one of "
+                             f"{OBJECTIVES}")
+        if self.unlabeled_weight < 0.0:
+            raise ValueError(f"unlabeled_weight={self.unlabeled_weight}; "
+                             f"expected >= 0")
+        if not 0.0 < self.pseudo_threshold < 1.0:
+            raise ValueError(f"pseudo_threshold={self.pseudo_threshold}; "
+                             f"expected in (0, 1)")
+        if self.noise_sigma < 0.0:
+            raise ValueError(f"noise_sigma={self.noise_sigma}; expected >= 0")
+
+    def is_identity(self) -> bool:
+        """True iff the engine must emit the exact pre-objectives program."""
+        return self.kind == "supervised"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientObjective:
+    """What the ClientLoop differentiates: ``loss(params, micro, key)``.
+
+    ``base_loss(params, micro)`` is the plain supervised loss the objective
+    wraps — the engine keeps using it for curvature probes (Hutchinson D̂
+    stats) and identity short-circuits.
+    """
+    spec: ObjectiveSpec
+    loss: Callable                  # (params, micro, key) -> scalar
+    base_loss: Callable             # (params, micro) -> scalar
+
+    def is_identity(self) -> bool:
+        return self.spec.is_identity()
+
+
+def _labeled_of(micro, like):
+    """Per-example labeled mask: the batch's ``"labeled"`` leaf, or all-ones
+    (fully supervised batch) when absent. ``like`` fixes the shape."""
+    lab = micro.get("labeled") if isinstance(micro, dict) else None
+    if lab is None:
+        return jnp.ones(like.shape[0], jnp.float32)
+    return lab.astype(jnp.float32)
+
+
+def _masked_ce(logits, y, mask):
+    """Mean CE over examples with mask=1 (0/0-safe: empty mask -> 0)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, y[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def classification_objective(spec: ObjectiveSpec,
+                             logits_fn: Callable) -> ClientObjective:
+    """Semi-supervised objective over classification microbatches
+    ``{"x": (b, D), "y": (b,), ["labeled": (b,)]}``.
+
+    ``logits_fn(params, x) -> (b, C)``. The consistency view perturbs the
+    input with N(0, noise_sigma²) noise drawn from the objective key.
+    """
+    def base_loss(params, micro):
+        return _masked_ce(logits_fn(params, micro["x"]), micro["y"],
+                          jnp.ones(micro["y"].shape[0], jnp.float32))
+
+    if spec.is_identity():
+        return ClientObjective(spec=spec, loss=lambda p, mc, k: base_loss(
+            p, mc), base_loss=base_loss)
+
+    def loss(params, micro, key):
+        x, y = micro["x"], micro["y"]
+        labeled = _labeled_of(micro, y)
+        logits = logits_fn(params, x)
+        sup = _masked_ce(logits, y, labeled)
+        if spec.kind == "consistency":
+            x_aug = x + spec.noise_sigma * jax.random.normal(
+                key, x.shape, x.dtype)
+            p_clean = jax.lax.stop_gradient(jax.nn.softmax(logits, axis=-1))
+            p_aug = jax.nn.softmax(logits_fn(params, x_aug), axis=-1)
+            unsup = jnp.mean(jnp.sum((p_aug - p_clean) ** 2, axis=-1))
+        else:  # pseudo-label
+            probs = jax.nn.softmax(logits, axis=-1)
+            conf = jnp.max(probs, axis=-1)
+            pseudo = jax.lax.stop_gradient(jnp.argmax(logits, axis=-1))
+            gate = (conf >= spec.pseudo_threshold).astype(jnp.float32) \
+                * (1.0 - labeled)
+            unsup = _masked_ce(logits, pseudo, gate)
+        return sup + spec.unlabeled_weight * unsup
+
+    return ClientObjective(spec=spec, loss=loss, base_loss=base_loss)
+
+
+def lm_objective(spec: ObjectiveSpec, model) -> ClientObjective:
+    """Semi-supervised objective over LM microbatches
+    ``{"tokens": (b, S), "labels": (b, S), ["labeled": (b,)]}``.
+
+    The labeled mask is per SEQUENCE (a client's document either has curated
+    targets or not). Supervised term: the model's own masked CE with the
+    labels of unlabeled sequences forced to the ignore id (-1) — bit-equal to
+    ``model.loss`` when everything is labeled. Unlabeled terms run on
+    ``model.logits``:
+
+      pseudo-label  per-position argmax targets on unlabeled sequences,
+                    gated by softmax confidence.
+      consistency   a token-dropout view (each position independently
+                    replaced by a uniform random token with prob
+                    ``noise_sigma``) must match the clean predictive
+                    distribution (stop-gradient) in mean squared probability.
+    """
+    V = model.cfg.vocab_size
+    base_loss = model.loss
+
+    if spec.is_identity():
+        return ClientObjective(spec=spec, loss=lambda p, mc, k: base_loss(
+            p, mc), base_loss=base_loss)
+
+    def loss(params, micro, key):
+        toks, labels = micro["tokens"], micro["labels"]
+        labeled = _labeled_of(micro, labels)                   # (b,)
+        lab_col = labeled[:, None]
+        sup_labels = jnp.where(lab_col > 0, labels, -1)
+        sup = base_loss(params, {"tokens": toks, "labels": sup_labels})
+        if spec.kind == "consistency":
+            logits = model.logits(params, micro)               # (b, S, V)
+            k1, k2 = jax.random.split(key)
+            drop = jax.random.bernoulli(k1, spec.noise_sigma, toks.shape)
+            rand = jax.random.randint(k2, toks.shape, 0, V, toks.dtype)
+            aug = dict(micro)
+            aug["tokens"] = jnp.where(drop, rand, toks)
+            p_clean = jax.lax.stop_gradient(jax.nn.softmax(logits, axis=-1))
+            p_aug = jax.nn.softmax(model.logits(params, aug), axis=-1)
+            unsup = jnp.mean(jnp.sum((p_aug - p_clean) ** 2, axis=-1))
+        else:  # pseudo-label
+            logits = model.logits(params, micro)               # (b, S, V)
+            probs = jax.nn.softmax(logits, axis=-1)
+            conf = jnp.max(probs, axis=-1)                     # (b, S)
+            pseudo = jax.lax.stop_gradient(jnp.argmax(logits, axis=-1))
+            gate = (conf >= spec.pseudo_threshold).astype(jnp.float32) \
+                * (1.0 - lab_col) * (labels >= 0)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            ce = -jnp.take_along_axis(logp, pseudo[..., None],
+                                      axis=-1)[..., 0]
+            unsup = jnp.sum(ce * gate) / jnp.maximum(jnp.sum(gate), 1.0)
+        return sup + spec.unlabeled_weight * unsup
+
+    return ClientObjective(spec=spec, loss=loss, base_loss=base_loss)
+
+
+def build_objective(spec: Optional[ObjectiveSpec], *, logits_fn=None,
+                    model=None) -> Optional[ClientObjective]:
+    """CLI/bench glue: None or identity spec -> None (the engine's
+    pre-objectives program); otherwise dispatch on what the caller has."""
+    if spec is None or spec.is_identity():
+        return None
+    if model is not None:
+        return lm_objective(spec, model)
+    if logits_fn is not None:
+        return classification_objective(spec, logits_fn)
+    raise ValueError("semi-supervised objective needs logits_fn or model")

@@ -1,4 +1,6 @@
 from repro.data.federated import (dirichlet_partition, heterogeneity_score,  # noqa
-                                  iid_partition, main_class_partition)
+                                  iid_partition, labeled_mask,
+                                  main_class_partition,
+                                  realized_main_fraction)
 from repro.data.loader import FederatedLoader, LMRoundLoader, QuadraticLoader  # noqa
 from repro.data.synthetic import ClassificationData, QuadraticProblem, TokenStream  # noqa

@@ -26,6 +26,8 @@ a B-round staleness budget divides the effective barrier by B).
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 SYSTEMS_MODELS = ("uniform", "lognormal", "tiers")
@@ -37,22 +39,31 @@ def main_class_partition(labels: np.ndarray, n_clients: int, main_frac: float,
     its samples come from that class, the rest drawn evenly from the others.
 
     Returns list of index arrays (one per client, equal sizes).
+
+    The realized main fraction can fall below ``main_frac`` when a main-class
+    pool runs dry (more clients per class than ``1 / main_frac`` can support,
+    i.e. roughly ``n_clients * main_frac > n_classes``): later clients of the
+    same class get topped up from other classes. That shortfall is detected
+    and reported with a ``UserWarning``; check ``realized_main_fraction`` when
+    the exact heterogeneity level matters.
     """
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
     n_classes = len(classes)
     per_client = len(labels) // n_clients
     n_main = int(round(per_client * main_frac))
-    n_rest = per_client - n_main
 
     by_class = {c: rng.permutation(np.where(labels == c)[0]).tolist()
                 for c in classes}
     out = []
+    dry = []
     for m in range(n_clients):
         main_c = classes[m % n_classes]
         take = []
         pool = by_class[main_c]
         k = min(n_main, len(pool))
+        if k < n_main:
+            dry.append((m, int(main_c), n_main - k))
         take += pool[:k]
         by_class[main_c] = pool[k:]
         # fill the remainder evenly from other classes
@@ -74,12 +85,52 @@ def main_class_partition(labels: np.ndarray, n_clients: int, main_frac: float,
             for c in classes:
                 by_class[c] = [i for i in by_class[c] if i not in used]
         out.append(np.array(take[:per_client]))
+    if dry:
+        worst = min(1.0 - s / n_main for _, _, s in dry) if n_main else 1.0
+        warnings.warn(
+            f"main_class_partition: main-class pool ran dry for "
+            f"{len(dry)}/{n_clients} clients (first: client {dry[0][0]}, "
+            f"class {dry[0][1]}, short {dry[0][2]} samples); realized main "
+            f"fraction drops to {worst * main_frac:.3f} < {main_frac} for "
+            f"the worst client. See realized_main_fraction().",
+            UserWarning, stacklevel=2)
     return out
+
+
+def realized_main_fraction(labels: np.ndarray, parts) -> np.ndarray:
+    """Per-client fraction of samples actually in the client's main class
+    (main class of client m = classes[m % n_classes], as assigned by
+    ``main_class_partition``)."""
+    classes = np.unique(labels)
+    fr = []
+    for m, idx in enumerate(parts):
+        main_c = classes[m % len(classes)]
+        fr.append((labels[idx] == main_c).mean() if len(idx) else 0.0)
+    return np.asarray(fr, dtype=np.float64)
+
+
+def _largest_remainder(raw: np.ndarray, total: int) -> np.ndarray:
+    """Integer quotas summing to ``total`` that minimize |quota - raw|:
+    floor everything, then hand the shortfall to the largest fractional
+    remainders (deterministic stable order)."""
+    quota = np.floor(raw).astype(np.int64)
+    short = int(total - quota.sum())
+    if short > 0:
+        order = np.argsort(-(raw - quota), kind="stable")
+        quota[order[:short]] += 1
+    return quota
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
                         seed: int = 0):
-    """Classic label-Dirichlet federated split (equal client sizes)."""
+    """Classic label-Dirichlet federated split (equal client sizes).
+
+    Per-client class quotas use largest-remainder rounding of the Dirichlet
+    proportions (NOT truncation): truncating and backfilling from a uniform
+    leftover shuffle systematically dilutes the drawn Dirichlet(α)
+    heterogeneity — every truncated sample is replaced by a ~uniform one.
+    The uniform backfill now only covers genuinely dry class pools.
+    """
     rng = np.random.default_rng(seed)
     classes = np.unique(labels)
     per_client = len(labels) // n_clients
@@ -89,7 +140,7 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
     out = []
     for m in range(n_clients):
         take = []
-        quota = (props[m] * per_client).astype(int)
+        quota = _largest_remainder(props[m] * per_client, per_client)
         for c, q in zip(classes, quota):
             pool = by_class[c]
             k = min(q, len(pool))
@@ -122,8 +173,11 @@ def iid_partition(n: int, n_clients: int, seed: int = 0):
 def sample_step_times(model: str, n_clients: int, seed: int = 0, *,
                       sigma: float = 0.6,
                       tiers=(1.0, 2.0, 4.0), tier_probs=None) -> np.ndarray:
-    """Per-client RELATIVE step times (fastest client = 1.0) under a
-    systems-heterogeneity model from SYSTEMS_MODELS."""
+    """Per-client RELATIVE step times under a systems-heterogeneity model
+    from SYSTEMS_MODELS. uniform/lognormal normalize so the fastest DRAWN
+    client is 1.0 (the model defines times only up to scale); tiers
+    normalizes by the declared fastest tier, so tier identities are stable
+    across seeds and n_clients."""
     rng = np.random.default_rng(seed)
     if model == "uniform":
         return np.ones(n_clients)
@@ -135,7 +189,11 @@ def sample_step_times(model: str, n_clients: int, seed: int = 0, *,
         if tier_probs is None:
             tier_probs = np.full(len(tiers), 1.0 / len(tiers))
         t = rng.choice(tiers, size=n_clients, p=np.asarray(tier_probs))
-        return t / t.min()
+        # Normalize by the DECLARED fastest tier, not the drawn minimum: a
+        # (1x, 2x, 4x) fleet must stay (2x, 4x) when no client draws tier 1
+        # in this sample — dividing by t.min() would silently relabel the 2x
+        # tier as the 1x baseline, changing tier semantics across seeds.
+        return t / tiers.min()
     raise ValueError(f"systems model {model!r}; expected one of "
                      f"{SYSTEMS_MODELS}")
 
@@ -182,6 +240,34 @@ def simulated_round_time(step_times: np.ndarray, local_steps, *,
     if barrier == "async":
         return slowest / max(int(buffer_rounds), 1)
     raise ValueError(f"barrier {barrier!r}; expected 'sync' or 'async'")
+
+
+def labeled_mask(labels: np.ndarray, labeled_frac: float,
+                 seed: int = 0) -> np.ndarray:
+    """Label-scarcity mask for semi-supervised clients (DESIGN.md §12).
+
+    Returns a float32 0/1 array over ``labels`` marking which examples keep
+    their label; the rest are treated as unlabeled by the semi-supervised
+    client objectives. The draw is stratified per class with largest-remainder
+    rounding, so every class keeps ~labeled_frac of its examples labeled
+    (at least 1 per class whenever labeled_frac > 0) — the standard SSL
+    protocol. labeled_frac >= 1 returns all-ones; <= 0 all-zeros.
+    """
+    n = len(labels)
+    if labeled_frac >= 1.0:
+        return np.ones(n, dtype=np.float32)
+    if labeled_frac <= 0.0:
+        return np.zeros(n, dtype=np.float32)
+    rng = np.random.default_rng(seed)
+    mask = np.zeros(n, dtype=np.float32)
+    classes = np.unique(labels)
+    counts = np.array([(labels == c).sum() for c in classes])
+    quota = _largest_remainder(counts * labeled_frac, int(round(n * labeled_frac)))
+    quota = np.maximum(quota, 1)
+    for c, q in zip(classes, quota):
+        idx = np.where(labels == c)[0]
+        mask[rng.permutation(idx)[:min(int(q), len(idx))]] = 1.0
+    return mask
 
 
 def heterogeneity_score(labels: np.ndarray, parts) -> float:

@@ -11,10 +11,19 @@ import numpy as np
 
 
 class FederatedLoader:
-    def __init__(self, x, y, parts, batch_size: int, seed: int = 0):
+    """``labeled`` is an optional per-example float32 0/1 array over the full
+    dataset (see ``federated.labeled_mask``); when given, round batches carry
+    a ``"labeled"`` (M,H,b) leaf consumed by the semi-supervised client
+    objectives (DESIGN.md §12). When None (the default), the batch structure
+    is exactly the pre-objectives two-leaf {"x", "y"} dict — supervised runs
+    are bit-identical to before the knob existed."""
+
+    def __init__(self, x, y, parts, batch_size: int, seed: int = 0,
+                 labeled=None):
         self.x, self.y = x, y
         self.parts = parts
         self.b = batch_size
+        self.labeled = labeled
         self.rng = np.random.default_rng(seed)
 
     @property
@@ -22,15 +31,22 @@ class FederatedLoader:
         return len(self.parts)
 
     def round_batch(self, H: int):
-        """Returns {"x": (M,H,b,D), "y": (M,H,b)}."""
+        """Returns {"x": (M,H,b,D), "y": (M,H,b)[, "labeled": (M,H,b)]}."""
         M, b = self.n_clients, self.b
         xs = np.empty((M, H, b) + self.x.shape[1:], dtype=self.x.dtype)
         ys = np.empty((M, H, b), dtype=self.y.dtype)
+        lab = (np.empty((M, H, b), dtype=np.float32)
+               if self.labeled is not None else None)
         for m, idx in enumerate(self.parts):
             pick = self.rng.choice(idx, size=(H, b), replace=True)
             xs[m] = self.x[pick]
             ys[m] = self.y[pick]
-        return {"x": xs, "y": ys}
+            if lab is not None:
+                lab[m] = self.labeled[pick]
+        out = {"x": xs, "y": ys}
+        if lab is not None:
+            out["labeled"] = lab
+        return out
 
 
 class QuadraticLoader:
@@ -55,12 +71,25 @@ class LMRoundLoader:
     was a per-round bottleneck at LM shapes), and a restored run at round r
     draws round-r data (DESIGN.md §9)."""
 
-    def __init__(self, stream, n_clients: int, batch_size: int):
+    def __init__(self, stream, n_clients: int, batch_size: int,
+                 labeled_frac: float = 1.0, seed: int = 0):
         self.stream = stream
         self.M = n_clients
         self.b = batch_size
+        self.labeled_frac = labeled_frac
+        self.seed = seed
 
     def round_batch(self, r: int, H: int, seq_len: int):
         toks, labs = self.stream.batch_at(r, self.M * H * self.b, seq_len)
         shape = (self.M, H, self.b, seq_len)
-        return {"tokens": toks.reshape(shape), "labels": labs.reshape(shape)}
+        out = {"tokens": toks.reshape(shape), "labels": labs.reshape(shape)}
+        if self.labeled_frac < 1.0:
+            # Per-SEQUENCE labeled mask, round-addressable like the tokens:
+            # a pure function of (seed, r), so checkpoint resume at round r
+            # redraws the identical mask (DESIGN.md §9/§12). labeled_frac
+            # >= 1 emits no leaf at all — supervised batches are bit-exact
+            # pre-objectives structures.
+            rng = np.random.default_rng([self.seed, 24593, r])
+            lab = rng.random((self.M, H, self.b)) < self.labeled_frac
+            out["labeled"] = lab.astype(np.float32)
+        return out

@@ -38,6 +38,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mode: str = "auto", method: str = "savic", compression=None,
             het_model=None, het_seed: int = 0, het_sigma: float = 0.6,
             asynchrony=None, controller=None, use_fused_kernel: bool = False,
+            objective=None, labeled_frac: float = 1.0, personal=None,
             out_dir: str = "results/dryrun",
             save: bool = True, call=None, tag: str = "", verbose=True):
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -52,6 +53,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                        compression=compression, het_model=het_model,
                        het_seed=het_seed, het_sigma=het_sigma,
                        asynchrony=asynchrony, controller=controller,
+                       objective=objective, labeled_frac=labeled_frac,
+                       personal=personal,
                        use_fused_kernel=use_fused_kernel, call=call) \
         if shape.kind == "train" else build_step(arch, shape_name, mesh,
                                                  call=call)
@@ -128,6 +131,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             # only genuinely ineligible builds fall back now (non-fp32
             # client state); sharded plans take the shard_map fast path
             rec["fused_kernel_fallback"] = built.meta["fused_kernel_fallback"]
+        if "objective" in built.meta:
+            # client objective & personalization (DESIGN.md §12): the kind,
+            # labeled fraction and client-resident leaf mask the program was
+            # lowered with — wire volume above already excludes personal
+            # leaves (bytes_on_wire strips them)
+            rec["objective"] = built.meta["objective"]
         hs = spec.client.local_steps
         rec["heterogeneity"] = {
             "local_steps": list(hs) if hs is not None else None,
@@ -202,6 +211,14 @@ def main():
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="flat-buffer fused client loop (one Pallas pass per "
                          "local step; artifact records the flat-view layout)")
+    ap.add_argument("--objective", default="supervised",
+                    help="client objective for train shapes "
+                         "(supervised|consistency|pseudo-label)")
+    ap.add_argument("--labeled-frac", type=float, default=1.0,
+                    help="labeled fraction (<1 adds the 'labeled' batch leaf)")
+    ap.add_argument("--personalize", default="",
+                    help="comma-separated client-resident param-path "
+                         "substrings (never synced; DESIGN.md §12)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
@@ -217,6 +234,11 @@ def main():
         from repro.core.controller import ControllerSpec
         ctrl = ControllerSpec(enabled=True, buffer_max=args.async_buffer)
         het = het or "lognormal"  # controller requires a heterogeneity trace
+    obj = None
+    if args.objective != "supervised":
+        from repro.core.objectives import ObjectiveSpec
+        obj = ObjectiveSpec(kind=args.objective)
+    personal = tuple(p for p in args.personalize.split(",") if p) or None
 
     if args.all:
         failures = []
@@ -226,6 +248,8 @@ def main():
                         method=args.method, compression=comp, het_model=het,
                         het_seed=args.het_seed, het_sigma=args.het_sigma,
                         asynchrony=asy, controller=ctrl,
+                        objective=obj, labeled_frac=args.labeled_frac,
+                        personal=personal,
                         use_fused_kernel=args.use_fused_kernel,
                         out_dir=args.out, tag=args.tag)
             except Exception as e:  # noqa
@@ -240,7 +264,8 @@ def main():
     run_one(args.arch, args.shape, multi_pod=args.multi_pod, mode=args.mode,
             method=args.method, compression=comp, het_model=het,
             het_seed=args.het_seed, het_sigma=args.het_sigma, asynchrony=asy,
-            controller=ctrl, use_fused_kernel=args.use_fused_kernel,
+            controller=ctrl, objective=obj, labeled_frac=args.labeled_frac,
+            personal=personal, use_fused_kernel=args.use_fused_kernel,
             out_dir=args.out, tag=args.tag)
 
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ModelConfig, ShapeConfig, get_config, get_shape
-from repro.core import PrecondConfig, SavicConfig, engine, savic
+from repro.core import PrecondConfig, SavicConfig, engine, objectives, savic
 from repro.models import ModelCallConfig, batch_struct, build
 from repro.sharding import (AxisPlan, batch_pspecs, cache_pspecs,
                             params_pspecs, plan_for, serve_batch_pspecs)
@@ -76,6 +76,9 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
                      local_steps: Optional[tuple] = None,
                      asynchrony: Optional[engine.AsyncSpec] = None,
                      controller: Optional[engine.ControllerSpec] = None,
+                     objective: Optional[objectives.ObjectiveSpec] = None,
+                     labeled_frac: float = 1.0,
+                     personal: Optional[tuple] = None,
                      use_fused_kernel: bool = False, seed: int = 0):
     cfg = get_config(arch, reduced=reduced)
     plan, mode = _train_plan(arch, mesh, mode)
@@ -156,12 +159,31 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
         spec = dataclasses.replace(
             spec, client=dataclasses.replace(spec.client,
                                              use_fused_kernel=True))
+    if personal:
+        # client-resident leaves (DESIGN.md §12): engine-level knob like
+        # compression/asynchrony — applies to every method / engine_spec
+        spec = dataclasses.replace(
+            spec, sync=dataclasses.replace(spec.sync,
+                                           personal=tuple(personal)))
+    client_objective = objectives.build_objective(objective, model=model)
+    if client_objective is not None or labeled_frac < 1.0 or personal:
+        het_meta["objective"] = {
+            "kind": objective.kind if objective is not None else "supervised",
+            "labeled_frac": labeled_frac,
+            "personal": list(spec.sync.personal),
+        }
 
     # ---- abstract state & batch ----------------------------------------------
     state_shape = jax.eval_shape(
         partial(engine.init_state, init_params_fn=model.init, spec=spec,
                 n_clients=M), jax.random.PRNGKey(0))
     micro = batch_struct(cfg, b_client, shape.seq_len)
+    if labeled_frac < 1.0:
+        # per-SEQUENCE labeled mask emitted by LMRoundLoader(labeled_frac<1);
+        # the fully-labeled regime adds no leaf — batch structure (and the
+        # compiled program) stay bit-exact pre-objectives
+        micro = dict(micro)
+        micro["labeled"] = jax.ShapeDtypeStruct((b_client,), jnp.float32)
     batch_shape = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((M, H) + s.shape, s.dtype), micro)
 
@@ -202,7 +224,8 @@ def build_train_step(arch: str, shape: ShapeConfig, mesh, *, mode: str = "auto",
             het_meta["flat_layout"] = FlatLayout.for_tree(
                 state_shape["params"], batch_dims=1).describe()
     round_step = engine.build_round_step(model.loss, spec,
-                                         shard_plan=shard_plan)
+                                         shard_plan=shard_plan,
+                                         objective=client_objective)
 
     def step(state, batch):
         # per-round key folded from the carried round counter: restart- and
@@ -255,7 +278,14 @@ def _fused_non_fp32(state_shape, spec: engine.EngineSpec) -> str:
 def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):
     """PartitionSpec tree for an engine state pytree (DESIGN.md §2): client
     leaves carry a leading M dim over the client axes; the global D and the
-    adaptive server's (m, v) are client-replicated single-replica trees."""
+    adaptive server's (m, v) are client-replicated single-replica trees.
+
+    Personalization (DESIGN.md §12) needs no special casing for server/buffer
+    specs: their shape-trees are already None-stripped by ``init_state`` and
+    ``params_pspecs`` walks paths, so the spec trees come out stripped to
+    match. Only the ``ef`` spec is derived from the FULL params spec tree and
+    must be stripped explicitly (PartitionSpecs are tuples — containers — so
+    the strip needs ``is_leaf``)."""
     pspec_m = params_pspecs(cfg, state_shape["params"], mesh, plan,
                             client_dim=True)
     state_spec = {
@@ -271,7 +301,9 @@ def _engine_state_spec(cfg, state_shape, mesh, plan, spec: engine.EngineSpec):
         state_spec["server"] = {"m": pspec_1, "v": pspec_1}
     if "ef" in state_shape:
         # EF compression residual: per-client, sharded exactly like params/mom
-        state_spec["ef"] = pspec_m
+        state_spec["ef"] = engine.strip_personal(
+            spec.sync.personal, pspec_m,
+            is_leaf=lambda x: isinstance(x, P))
     if "buffer" in state_shape:
         # staleness delta FIFO (DESIGN.md §5): single-replica shaped with a
         # leading B dim — B is never sharded, inner dims like one replica's

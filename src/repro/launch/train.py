@@ -49,7 +49,7 @@ import numpy as np
 
 from repro import checkpoint as ckpt_lib
 from repro.configs import ShapeConfig, get_config
-from repro.core import PrecondConfig, SavicConfig, engine, savic
+from repro.core import PrecondConfig, SavicConfig, engine, objectives, savic
 from repro.data import LMRoundLoader, TokenStream
 from repro.data import federated
 from repro.models import ModelCallConfig, build
@@ -131,6 +131,24 @@ def _parser():
     ap.add_argument("--ctrl-resid-guard", type=float, default=0.5,
                     help="controller: EF-residual-norm ratio above which k "
                          "grows back toward 1")
+    ap.add_argument("--objective", default="supervised",
+                    choices=list(objectives.OBJECTIVES),
+                    help="client objective (DESIGN.md §12): supervised is the "
+                         "identity (bit-exact pre-objectives program); "
+                         "consistency / pseudo-label are the semi-supervised "
+                         "losses over the labeled subset")
+    ap.add_argument("--labeled-frac", type=float, default=1.0,
+                    help="fraction of each client's sequences carrying labels "
+                         "(<1 attaches the per-sequence 'labeled' mask leaf)")
+    ap.add_argument("--unlabeled-weight", type=float, default=1.0,
+                    help="λ_u on the unlabeled objective term")
+    ap.add_argument("--pseudo-threshold", type=float, default=0.9,
+                    help="confidence gate for --objective pseudo-label")
+    ap.add_argument("--personalize", default="",
+                    help="comma-separated param-path substrings kept client-"
+                         "resident (never synced/served; e.g. 'final_norm'). "
+                         "Personalizing under a GLOBAL non-identity D is "
+                         "rejected at build time (DESIGN.md §12)")
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="flat-buffer fused client loop: one Pallas pass per "
                          "local step, every preconditioner kind (DESIGN.md "
@@ -201,7 +219,18 @@ def _resolve_spec(args, n_clients):
     if ctrl is not None:
         import dataclasses as _dc
         spec = _dc.replace(spec, controller=ctrl)
+    personal = tuple(p for p in args.personalize.split(",") if p)
+    if personal:
+        import dataclasses as _dc
+        spec = _dc.replace(spec, sync=_dc.replace(spec.sync,
+                                                  personal=personal))
     return spec, local_steps, step_times
+
+
+def _objective_spec(args) -> objectives.ObjectiveSpec:
+    return objectives.ObjectiveSpec(
+        kind=args.objective, unlabeled_weight=args.unlabeled_weight,
+        pseudo_threshold=args.pseudo_threshold)
 
 
 def main(argv=None):
@@ -243,6 +272,7 @@ def main(argv=None):
         built = steps_mod.build_train_step(
             args.arch, shape, mesh, mode=args.mode, engine_spec=spec,
             reduced=args.reduced, h_local=args.h_local, call=call,
+            objective=_objective_spec(args), labeled_frac=args.labeled_frac,
             seed=args.seed + 1)
         spec = built.meta["engine_spec"]   # fused fallback may have applied
         if "fused_kernel_fallback" in built.meta:
@@ -257,7 +287,10 @@ def main(argv=None):
         run_step = lambda state, batch, r: jitted(state, batch)
         put_batch = lambda nb: jax.device_put(nb, batch_shardings)
     else:
-        round_step = jax.jit(engine.build_round_step(model.loss, spec))
+        client_obj = objectives.build_objective(_objective_spec(args),
+                                                model=model)
+        round_step = jax.jit(engine.build_round_step(model.loss, spec,
+                                                     objective=client_obj))
         root = jax.random.PRNGKey(args.seed + 1)
         # fold_in(root, r), NOT sequential splits from process start: a
         # restored run replays exactly round r's key (DESIGN.md §9)
@@ -275,7 +308,8 @@ def main(argv=None):
         state = jax.device_put(state, state_shardings)
 
     stream = TokenStream(cfg.vocab_size, seed=args.seed)
-    loader = LMRoundLoader(stream, M, args.batch)
+    loader = LMRoundLoader(stream, M, args.batch,
+                           labeled_frac=args.labeled_frac, seed=args.seed)
     tokens_round = M * args.h_local * args.batch * args.seq
     log = []
     t0 = time.time()
@@ -343,15 +377,16 @@ def _wrap_modal(cfg, nb, seed, r):
     """
     rng = np.random.default_rng((seed, r, 1))
     M, H, b, S = nb["tokens"].shape
+    lab = {"labeled": nb["labeled"]} if "labeled" in nb else {}
     if cfg.family == "audio":
         emb = rng.normal(size=(M, H, b, S, cfg.d_model)).astype(np.float32) * .02
-        return {"embeds": emb, "labels": nb["labels"]}
+        return {"embeds": emb, "labels": nb["labels"], **lab}
     P = cfg.frontend_tokens
     # batch_struct contract: P patch embeddings prepended to S−P text tokens,
     # so the model's position budget stays at --seq on both launch paths
     patches = rng.normal(size=(M, H, b, P, cfg.d_model)).astype(np.float32) * .02
     return {"patches": patches, "tokens": nb["tokens"][..., :S - P],
-            "labels": nb["labels"][..., :S - P]}
+            "labels": nb["labels"][..., :S - P], **lab}
 
 
 if __name__ == "__main__":

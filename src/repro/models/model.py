@@ -65,6 +65,10 @@ class Model:
     # (params, cache, token, pos, noise (B,V)) -> (next token (B,), cache):
     # one decode step fused with gumbel-argmax sampling (greedy = zero noise).
     decode_sample: Callable = None
+    # (params, batch) -> full-sequence fp32 logits (B, S, V): the pre-CE
+    # view of ``loss`` — what the semi-supervised client objectives
+    # (core/objectives.py) consume for pseudo-labels / consistency targets.
+    logits: Callable = None
 
 
 def build(cfg: ModelConfig, call: Optional[ModelCallConfig] = None) -> Model:
@@ -105,7 +109,7 @@ def build(cfg: ModelConfig, call: Optional[ModelCallConfig] = None) -> Model:
     def _constrain(x):
         return call.act_shard(x) if call.act_shard is not None else x
 
-    def loss(params, batch):
+    def _forward_logits(params, batch):
         x, labels, _ = _residual_input(params, batch)
         x = _constrain(x)
         S = x.shape[1]
@@ -114,8 +118,14 @@ def build(cfg: ModelConfig, call: Optional[ModelCallConfig] = None) -> Model:
                               _attncall(S), dtype, want_cache=False,
                               remat=call.remat)
         y = rmsnorm(params["final_norm"], y, cfg.norm_eps)
-        logits = unembed(params["embed"], y, cfg, dtype)
-        return cross_entropy(logits, labels, cfg.vocab_size) + aux
+        return unembed(params["embed"], y, cfg, dtype), labels, aux
+
+    def loss(params, batch):
+        logits_, labels, aux = _forward_logits(params, batch)
+        return cross_entropy(logits_, labels, cfg.vocab_size) + aux
+
+    def logits(params, batch):
+        return _forward_logits(params, batch)[0].astype(jnp.float32)
 
     def prefill(params, batch):
         x, _, _ = _residual_input(params, batch)
@@ -199,8 +209,8 @@ def build(cfg: ModelConfig, call: Optional[ModelCallConfig] = None) -> Model:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return tok, cache
 
-    return Model(cfg=cfg, call=call, init=init, loss=loss, prefill=prefill,
-                 decode=decode, init_cache=init_cache,
+    return Model(cfg=cfg, call=call, init=init, loss=loss, logits=logits,
+                 prefill=prefill, decode=decode, init_cache=init_cache,
                  prefill_cache=prefill_cache, decode_sample=decode_sample)
 
 

@@ -3,10 +3,13 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.checkpoint import latest_step, restore, save
 from repro.data import (ClassificationData, FederatedLoader, QuadraticProblem,
                         TokenStream, dirichlet_partition, heterogeneity_score,
-                        iid_partition, main_class_partition)
+                        iid_partition, main_class_partition,
+                        realized_main_fraction)
+from repro.data import federated as fed
 
 
 def test_main_class_partition_fractions():
@@ -81,3 +84,123 @@ def test_checkpoint_gc(tmp_path):
     import os
     left = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
     assert len(left) == 3
+
+
+# --------------------------------------------------------------------------- #
+# partitioner contract suite (equal sizes / disjointness / realized fractions)
+# --------------------------------------------------------------------------- #
+
+
+def _balanced_labels(n=10000, n_classes=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.permutation(np.repeat(np.arange(n_classes), n // n_classes))
+
+
+def _assert_partition_contract(parts, n_total):
+    sizes = [len(p) for p in parts]
+    assert len(set(sizes)) == 1, sizes                  # equal sizes
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(set(allidx.tolist()))     # disjoint
+    assert allidx.min() >= 0 and allidx.max() < n_total
+
+
+@pytest.mark.parametrize("mk", [
+    lambda y, M, seed: iid_partition(len(y), M, seed=seed),
+    lambda y, M, seed: dirichlet_partition(y, M, alpha=0.3, seed=seed),
+    lambda y, M, seed: main_class_partition(y, M, 0.3, seed=seed),
+], ids=["iid", "dirichlet", "main_class"])
+@pytest.mark.parametrize("M", [4, 7, 10])
+@pytest.mark.filterwarnings("ignore:main_class_partition")
+def test_partitioners_equal_sizes_and_disjoint(mk, M):
+    y = _balanced_labels()
+    _assert_partition_contract(mk(y, M, 1), len(y))
+
+
+@pytest.mark.filterwarnings("ignore:main_class_partition")
+def test_main_class_realized_fraction_tolerance():
+    """With one client per class the realized main fraction matches the
+    requested fraction to within sampling tolerance."""
+    y = _balanced_labels()
+    for frac in (0.3, 0.5):
+        parts = main_class_partition(y, 10, frac, seed=2)
+        fr = realized_main_fraction(y, parts)
+        np.testing.assert_allclose(fr, frac, atol=0.05)
+
+
+def test_main_class_dry_pool_warns_and_reports():
+    """Oversubscribed main classes (n_clients·main_frac >> n_classes) warn
+    and the realized fraction visibly drops for the starved clients."""
+    # 4 clients × frac 0.5 of 1000 samples each asks 500 from a 400-sample
+    # class pool: guaranteed dry from the first client
+    y = _balanced_labels(n=4000)
+    with pytest.warns(UserWarning, match="ran dry"):
+        parts = main_class_partition(y, 4, 0.5, seed=0)
+    _assert_partition_contract(parts, len(y))
+    fr = realized_main_fraction(y, parts)
+    assert fr.max() <= 0.4 + 0.05          # pool cap: 400/1000 per client
+
+
+def test_dirichlet_heterogeneity_monotone_in_alpha():
+    """Smaller α must mean MORE heterogeneity: the largest-remainder quota
+    fix makes heterogeneity_score strictly decreasing in α (truncation +
+    uniform backfill used to flatten the small-α end)."""
+    y = _balanced_labels()
+    for seed in (0, 1):
+        scores = [heterogeneity_score(
+            y, dirichlet_partition(y, 10, a, seed=seed))
+            for a in (0.05, 0.2, 1.0, 5.0, 50.0)]
+        assert scores == sorted(scores, reverse=True), (seed, scores)
+
+
+def test_largest_remainder_quota():
+    raw = np.array([2.6, 3.6, 1.8])
+    q = fed._largest_remainder(raw, 8)
+    assert q.sum() == 8
+    assert np.all(np.abs(q - raw) < 1.0)
+    # exact integers pass through untouched
+    np.testing.assert_array_equal(
+        fed._largest_remainder(np.array([2.0, 3.0, 5.0]), 10), [2, 3, 5])
+
+
+def test_step_times_tiers_normalized_by_declared_fastest_tier():
+    """Regression: tiers must normalize by tiers.min(), not the drawn min.
+    When no client draws the fast tier, the 2× tier must stay 2× — dividing
+    by the drawn minimum used to silently relabel it as the 1× baseline."""
+    t = fed.sample_step_times("tiers", 64, seed=0,
+                              tiers=(1.0, 2.0, 4.0),
+                              tier_probs=(0.0, 0.5, 0.5))
+    assert set(np.unique(t)) <= {2.0, 4.0}
+    assert t.min() == 2.0                  # NOT renormalized to 1.0
+    # with the full fleet the fastest tier is the 1.0 baseline
+    t_full = fed.sample_step_times("tiers", 64, seed=0)
+    assert set(np.unique(t_full)) <= {1.0, 2.0, 4.0}
+    assert t_full.min() == 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=12),
+       st.integers(min_value=2, max_value=8),
+       st.integers(min_value=0, max_value=99))
+def test_partition_contract_hypothesis(n_classes, M, seed):
+    import warnings as _w
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, n_classes, size=40 * M)
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", UserWarning)
+        for parts in (dirichlet_partition(y, M, alpha=0.2, seed=seed),
+                      main_class_partition(y, M, 0.4, seed=seed),
+                      iid_partition(len(y), M, seed=seed)):
+            _assert_partition_contract(parts, len(y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(min_value=0.01, max_value=0.99),
+       st.integers(min_value=0, max_value=99))
+def test_largest_remainder_hypothesis(frac, seed):
+    rng = np.random.default_rng(seed)
+    raw = rng.random(8) * 10.0 * frac
+    total = int(np.ceil(raw.sum()))
+    q = fed._largest_remainder(raw, total)
+    assert q.sum() == total
+    assert np.all(q >= np.floor(raw))
+    assert np.all(q <= np.floor(raw) + 1)
